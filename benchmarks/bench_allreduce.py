@@ -1,0 +1,69 @@
+"""Paper Figures 1/2/5: gradient-reduction time & bandwidth vs vector length,
+original (per-tensor, unidirectional, unfused) vs optimised policies.
+
+Workload mirrors synchronous-SGD gradient reduction: a pytree of K tensors
+totalling L fp32 elements (K grows with L like a real model's parameter
+list).  ``baidu_original`` reduces tensor-by-tensor over a one-direction
+ring (the published code's behaviour); the optimised policies fuse into
+aligned buckets and run bidirectional chunked / hierarchical / compressed
+rings; ``native_psum`` is the vendor-collective reference.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import TIMER_SNIPPET, run_on_devices
+
+SCRIPT = TIMER_SNIPPET + r"""
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, AxisType
+from repro.core.reducer import GradientReducer, ReduceConfig
+
+mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(AxisType.Auto,)*2)
+P_WORLD = 8
+
+def workload(total_elems, rng):
+    k = int(min(32, max(1, total_elems // 4096)))
+    sizes = np.full(k, total_elems // k)
+    sizes[0] += total_elems - sizes.sum()
+    return {f"g{i}": jnp.asarray(rng.randn(int(s)).astype(np.float32))
+            for i, s in enumerate(sizes)}
+
+POLICIES = [
+    ("baidu_original", dict(policy="baidu_original", bucket_bytes=1)),
+    ("fused_ring", dict(policy="fused_ring", chunks=2, bucket_bytes=32*2**20)),
+    ("fused_ring_hierarchical", dict(policy="fused_ring_hierarchical",
+                                     chunks=2, bucket_bytes=32*2**20)),
+    ("fused_ring_compressed", dict(policy="fused_ring_compressed",
+                                   chunks=2, bucket_bytes=32*2**20)),
+    ("native_psum", dict(policy="native_psum")),
+    ("native_psum_fused", dict(policy="native_psum_fused",
+                               bucket_bytes=32*2**20)),
+]
+
+rng = np.random.RandomState(0)
+print("policy,elements,us_per_call,alg_bw_mb_s,pct_vs_original")
+base = {}
+for total in [1<<12, 1<<16, 1<<20, 1<<22]:
+    tree = workload(total, rng)
+    specs = {k: P() for k in tree}
+    for name, kw in POLICIES:
+        red = GradientReducer(mesh, ReduceConfig(data_axes=("pod","data"), **kw))
+        fn = jax.jit(lambda g: red.reduce(g, specs)[0])
+        sec = time_call(fn, tree)
+        # ring algorithm bytes: 2 (p-1)/p * payload, both directions counted once
+        alg_bytes = 2 * (P_WORLD - 1) / P_WORLD * total * 4
+        bw = alg_bytes / sec / 1e6
+        if name == "baidu_original":
+            base[total] = sec
+        pct = 100.0 * base[total] / sec
+        print(f"{name},{total},{sec*1e6:.1f},{bw:.1f},{pct:.0f}")
+"""
+
+
+def run() -> str:
+    return run_on_devices(SCRIPT)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,45 @@
+"""Benchmark harness helpers.
+
+Measured benchmarks run in fresh subprocesses with 8 XLA host devices: the
+paper's *algorithmic* effects (per-tensor call overhead, fusion, chunking,
+schedule) are real and measurable on shared-memory devices even though the
+wire is a memcpy; wire-level effects live in the dry-run roofline instead
+(EXPERIMENTS.md explains the split).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_on_devices(script: str, n_devices: int = 8, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(f"benchmark subprocess failed:\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+TIMER_SNIPPET = r"""
+import time
+import jax
+
+def time_call(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts)//2]  # median seconds
+"""

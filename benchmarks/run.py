@@ -1,0 +1,55 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV blocks (measured on 8 XLA host
+devices in subprocesses; see benchmarks/common.py for why measured numbers
+live here and wire-level numbers live in the dry-run roofline).
+
+    PYTHONPATH=src python -m benchmarks.run [--only allreduce,halo,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import bench_allreduce, bench_halo, bench_overhead, \
+    bench_stencil
+
+SECTIONS = [
+    ("fig1_2_5_allreduce", bench_allreduce.run,
+     "Figs 1/2/5: reduction time & bandwidth vs vector length"),
+    ("fig3_4_overhead", bench_overhead.run,
+     "Figs 3/4: non-comm overhead and %time in communication"),
+    ("tab1_3_halo", bench_halo.run,
+     "Tables I-III: halo exchange schedules"),
+    ("tab5_6_stencil", bench_stencil.run,
+     "Tables V/VI: stencil application throughput"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = 0
+    for name, fn, desc in SECTIONS:
+        if only and not any(o in name for o in only):
+            continue
+        print(f"\n## {name} — {desc}", flush=True)
+        t0 = time.time()
+        try:
+            out = fn()
+            sys.stdout.write(out)
+            print(f"## {name} done in {time.time()-t0:.0f}s", flush=True)
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"## {name} FAILED: {e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

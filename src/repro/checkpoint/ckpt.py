@@ -1,0 +1,166 @@
+"""Checkpointing: atomic step directories, integrity hashes, async writes.
+
+Layout::
+
+    <dir>/step_000123/
+        meta.msgpack       # treedef repr, leaf paths/shapes/dtypes, sha256s
+        arr_00000.npy ...  # one file per leaf (np.save, host-gathered)
+        COMMITTED          # written last; restore ignores dirs without it
+
+Fault-tolerance contract: a crash mid-write leaves an uncommitted dir that
+restore skips; ``keep_n`` GC never deletes the newest committed step.  On
+elastic restarts the state is saved as *global* arrays, so a different mesh
+shape can reshard on restore (the manual step re-slices per device).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+COMMIT_MARK = "COMMITTED"
+
+
+def _leaf_paths(tree) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(p) for p, _ in flat]
+
+
+def save(state: Any, step: int, ckpt_dir: str) -> str:
+    """Blocking save of a pytree of (possibly sharded) jax arrays."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    meta = {"step": int(step), "treedef": str(treedef), "leaves": []}
+    for i, (path, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"arr_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        with open(os.path.join(tmp, fname), "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        meta["leaves"].append({
+            "path": jax.tree_util.keystr(path), "file": fname,
+            "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "sha256": digest,
+        })
+    with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta))
+    with open(os.path.join(tmp, COMMIT_MARK), "w") as f:
+        f.write("ok\n")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(ckpt_dir, name, COMMIT_MARK)):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(like: Any, step: int, ckpt_dir: str, *, verify: bool = True,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (arrays or SDS).  Optional
+    ``shardings`` tree re-places leaves (elastic re-mesh)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "meta.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    if len(flat) != len(meta["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(meta['leaves'])} leaves, state expects "
+            f"{len(flat)} — incompatible structures")
+    out = []
+    sh_flat = (jax.tree_util.tree_flatten(
+        shardings, is_leaf=lambda x: hasattr(x, "addressable_devices"))[0]
+        if shardings is not None else [None] * len(flat))
+    for leaf, rec, sh in zip(flat, meta["leaves"], sh_flat):
+        p = os.path.join(d, rec["file"])
+        if verify:
+            with open(p, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            if digest != rec["sha256"]:
+                raise IOError(f"checksum mismatch for {rec['path']} in {d}")
+        arr = np.load(p)
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {rec['path']}: ckpt {arr.shape} vs "
+                f"state {leaf.shape}")
+        val = jnp.asarray(arr, dtype=leaf.dtype)
+        if sh is not None:
+            val = jax.device_put(val, sh)
+        out.append(val)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Async (thread-offloaded) saves + keep-N garbage collection."""
+
+    def __init__(self, ckpt_dir: str, keep_n: int = 3, async_save: bool = True):
+        self.ckpt_dir = ckpt_dir
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, state: Any, step: int):
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+
+        def work():
+            try:
+                save(host_state, step, self.ckpt_dir)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            if self._error is not None:
+                raise self._error
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.ckpt_dir)
+            if n.startswith("step_") and not n.endswith(".tmp")
+            and os.path.exists(os.path.join(self.ckpt_dir, n, COMMIT_MARK)))
+        for s in steps[:-self.keep_n]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return None, None
+        return restore(like, step, self.ckpt_dir, shardings=shardings), step

@@ -1,0 +1,17 @@
+"""llama3.2-1b [dense]: small llama3; tied embeddings.
+[hf:meta-llama/Llama-3.2-1B; unverified]"""
+
+from repro.configs.base import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    d_ff=8192,
+    vocab_size=128256,
+    attn=AttnConfig(num_heads=32, num_kv_heads=8, head_dim=64,
+                    rope_theta=500_000.0),
+    tie_embeddings=True,
+    sharding="tp",
+)

@@ -1,0 +1,14 @@
+"""phi3-medium-14b [dense]: RoPE + SwiGLU + GQA.  [arXiv:2404.14219]"""
+
+from repro.configs.base import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    d_ff=17920,
+    vocab_size=100352,
+    attn=AttnConfig(num_heads=40, num_kv_heads=10, head_dim=128),
+    sharding="fsdp",
+)

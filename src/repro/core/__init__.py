@@ -1,0 +1,33 @@
+"""Core of the reproduction: explicit, schedulable communication.
+
+The paper's contribution — near-wirespeed gradient reduction and halo
+exchange via guaranteed large buffers + multi-channel concurrency — lives
+here as composable JAX modules:
+
+* :mod:`repro.core.ring`        — ppermute ring collectives (bi-directional,
+  chunked, hierarchical/pod-aware, codec-capable).
+* :mod:`repro.core.bucketing`   — fused persistent gradient buckets (the
+  'guaranteed huge pages' analogue).
+* :mod:`repro.core.reducer`     — policy facade: baidu_original baseline vs
+  optimised schedules vs native XLA collectives.
+* :mod:`repro.core.halo`        — Cartesian halo exchange (QCD workload).
+* :mod:`repro.core.compression` — wire codecs + error feedback.
+* :mod:`repro.core.overlap`     — gradient-accumulation overlap policies.
+"""
+
+from repro.core.bucketing import BucketPlan, GradientBucketer
+from repro.core.compression import ErrorFeedback, Int8BlockCodec, IdentityCodec, make_codec
+from repro.core.halo import HaloSpec, halo_exchange, pad_with_halos
+from repro.core.overlap import AccumConfig, accumulate_and_reduce
+from repro.core.reducer import GradientReducer, ReduceConfig, per_tensor_reducer
+from repro.core.ring import (RingConfig, flat_all_reduce, hierarchical_all_reduce,
+                             ring_all_gather, ring_all_reduce, ring_reduce_scatter)
+
+__all__ = [
+    "AccumConfig", "BucketPlan", "ErrorFeedback", "GradientBucketer",
+    "GradientReducer", "HaloSpec", "IdentityCodec", "Int8BlockCodec",
+    "ReduceConfig", "RingConfig", "accumulate_and_reduce", "flat_all_reduce",
+    "halo_exchange", "hierarchical_all_reduce", "make_codec",
+    "pad_with_halos", "per_tensor_reducer", "ring_all_gather",
+    "ring_all_reduce", "ring_reduce_scatter",
+]

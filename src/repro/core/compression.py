@@ -1,0 +1,118 @@
+"""Wire codecs + error feedback for gradient reduction (beyond-paper).
+
+The paper drives the fabric at 70-90 % of wirespeed; once there, the only
+remaining lever is *sending fewer bytes*.  We add block-quantised int8 wire
+compression with error feedback — a standard distributed-optimisation trick
+that composes with the paper's schedule: each ring hop carries ``(int8 q,
+fp32 block scales)`` instead of fp32, cutting collective bytes ~3.8x.
+
+Codecs are pytree-payload transforms used by ``core.ring``:
+
+* reduce-scatter hops re-encode the running partial sum (per-hop rounding;
+  bounded by the block scale, compensated at the source by error feedback);
+* all-gather hops encode once at the source and forward verbatim (lossless
+  relative to the encoded value).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Payload = dict[str, jax.Array]
+
+
+class IdentityCodec:
+    """No-op codec; optionally casts to a narrow wire dtype (bf16 rail)."""
+
+    def __init__(self, wire_dtype=None):
+        self.wire_dtype = jnp.dtype(wire_dtype) if wire_dtype is not None else None
+
+    block = 1
+
+    def encode(self, x: jax.Array) -> Payload:
+        if self.wire_dtype is not None:
+            x = x.astype(self.wire_dtype)
+        return {"x": x}
+
+    def decode(self, payload: Payload) -> jax.Array:
+        return payload["x"]
+
+    def wire_bytes(self, n_elems: int, accum_dtype=jnp.float32) -> int:
+        dt = self.wire_dtype or jnp.dtype(accum_dtype)
+        return n_elems * dt.itemsize
+
+
+class Int8BlockCodec:
+    """Per-block absmax int8 quantisation.
+
+    ``encode``: view ``x`` as (n/block, block); scale each block by
+    ``absmax/127`` and round-to-nearest into int8.  ``decode`` inverts.
+    Requires ``x.size % block == 0`` (the bucketer's pad multiple guarantees
+    this).  4 bytes of scale per ``block`` elements => wire ratio
+    ``(1 + 4/block) / 4`` vs fp32 (~0.258 at block=512).
+    """
+
+    def __init__(self, block: int = 512):
+        if block <= 0:
+            raise ValueError("block must be positive")
+        self.block = block
+
+    def encode(self, x: jax.Array) -> Payload:
+        n = x.shape[0]
+        if n % self.block != 0:
+            raise ValueError(f"size {n} not divisible by codec block {self.block}")
+        xb = x.astype(jnp.float32).reshape(-1, self.block)
+        scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+        q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+        return {"q": q.reshape(-1), "scale": scale.reshape(-1)}
+
+    def decode(self, payload: Payload) -> jax.Array:
+        q = payload["q"].astype(jnp.float32).reshape(-1, self.block)
+        scale = payload["scale"].reshape(-1, 1)
+        return (q * scale).reshape(-1)
+
+    def wire_bytes(self, n_elems: int, accum_dtype=jnp.float32) -> int:
+        return n_elems * 1 + (n_elems // self.block) * 4
+
+
+def make_codec(name: str | None, *, wire_dtype=None, block: int = 512):
+    if name in (None, "none", "identity"):
+        return IdentityCodec(wire_dtype=wire_dtype)
+    if name == "int8":
+        return Int8BlockCodec(block=block)
+    raise ValueError(f"unknown codec {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# error feedback (EF-SGD): re-inject each device's own quantisation error
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ErrorFeedback:
+    """Source-side error feedback for lossy wire codecs.
+
+    ``compensate`` adds the residual carried from the previous step and
+    returns the new residual (the part of the compensated gradient the codec
+    cannot represent).  State is a pytree congruent with the bucket list.
+    """
+
+    codec: Any
+
+    def init(self, buckets: list[jax.Array]) -> list[jax.Array]:
+        return [jnp.zeros_like(b, dtype=jnp.float32) for b in buckets]
+
+    def compensate(self, buckets: list[jax.Array], residuals: list[jax.Array]
+                   ) -> tuple[list[jax.Array], list[jax.Array]]:
+        comp, new_res = [], []
+        for b, r in zip(buckets, residuals):
+            y = b.astype(jnp.float32) + r
+            decoded = self.codec.decode(self.codec.encode(y))
+            comp.append(y)
+            new_res.append(y - decoded)
+        return comp, new_res

@@ -1,0 +1,3 @@
+from repro.data.synthetic import DataConfig, SyntheticTokens, make_batch_specs
+
+__all__ = ["DataConfig", "SyntheticTokens", "make_batch_specs"]

@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimises.
+
+The paper's T4 is 'thread the local reduce/copy loops' — on TPU the analogue
+is VPU/MXU-aligned fused kernels with explicit VMEM tiling:
+
+* ``reduce_add``  — the ring step's local ``acc += recv`` with fp32
+  accumulation over a narrow wire dtype.
+* ``quant``       — int8 block quantise/dequantise for the wire codec.
+* ``flash_attn``  — blockwise causal attention (serving prefill hot-spot).
+
+Each kernel ships ``ops.py`` (jit'd wrapper; ``interpret=True`` on CPU) and
+``ref.py`` (pure-jnp oracle used by the allclose test sweeps).
+"""
+
+
+def on_tpu() -> bool:
+    import jax
+
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Pallas kernels execute in interpret mode off-TPU (CPU CI)."""
+    return not on_tpu()

@@ -1,0 +1,27 @@
+"""Jit'd wrapper for flash attention with oracle fallback.
+
+Used by the serving prefill path; training uses the differentiable
+blockwise-jnp implementation in ``models.attention`` (same math, has a VJP).
+Sequences that do not tile by the block size fall back to the oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import default_interpret
+from repro.kernels.flash_attn import ref
+from repro.kernels.flash_attn.flash_attn import flash_attention_fwd
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    sq, sk = q.shape[2], k.shape[2]
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    if sq % bq or sk % bk or q.shape[3] % 8:
+        return ref.attention(q, k, v, causal=causal, window=window)
+    interpret = default_interpret() if interpret is None else interpret
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=bq, block_k=bk, interpret=interpret)

@@ -1,0 +1,3 @@
+from repro.kernels.quant.ops import dequantize, quantize
+
+__all__ = ["quantize", "dequantize"]

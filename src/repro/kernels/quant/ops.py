@@ -1,0 +1,46 @@
+"""Jit'd wrappers for the int8 block codec kernels.
+
+``quantize``/``dequantize`` take flat payloads + a block size, reshape to
+(n_blocks, block), and dispatch to Pallas (interpret off-TPU) or the jnp
+oracle when the layout is not lane-aligned.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.quant import ref
+from repro.kernels.quant.quant import dequantize_blocks, quantize_blocks
+
+LANES = 128
+
+
+def quantize(x: jax.Array, block: int = 512, *, interpret: bool | None = None):
+    """Flat fp32 (n,) -> (int8 (n,), fp32 scales (n/block,))."""
+    n = x.shape[0]
+    if n % block != 0:
+        raise ValueError(f"size {n} not divisible by block {block}")
+    xb = x.reshape(-1, block)
+    if block % LANES != 0:
+        q, s = ref.quantize_blocks(xb)
+    else:
+        interpret = default_interpret() if interpret is None else interpret
+        q, s = quantize_blocks(xb, interpret=interpret)
+    return q.reshape(-1), s.reshape(-1)
+
+
+def dequantize(q: jax.Array, scales: jax.Array, block: int = 512, *,
+               interpret: bool | None = None) -> jax.Array:
+    n = q.shape[0]
+    if n % block != 0:
+        raise ValueError(f"size {n} not divisible by block {block}")
+    qb = q.reshape(-1, block)
+    sb = scales.reshape(-1, 1)
+    if block % LANES != 0:
+        out = ref.dequantize_blocks(qb, sb)
+    else:
+        interpret = default_interpret() if interpret is None else interpret
+        out = dequantize_blocks(qb, sb, interpret=interpret)
+    return out.reshape(-1)

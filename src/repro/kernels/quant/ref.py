@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the quant kernels (mirrors core.compression)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_blocks(x: jax.Array):
+    x = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_blocks(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale

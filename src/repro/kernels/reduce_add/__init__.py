@@ -1,0 +1,3 @@
+from repro.kernels.reduce_add.ops import add_accum
+
+__all__ = ["add_accum"]

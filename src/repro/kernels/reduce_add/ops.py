@@ -1,0 +1,32 @@
+"""Jit'd wrapper: flat-payload accumulate with automatic tiling/fallback.
+
+``add_accum`` is the ``local_op='pallas'`` hook of ``core.ring``: it accepts
+the ring hop's 1-D payloads, views them as (rows, 128) tiles, and runs the
+Pallas kernel (interpret mode off-TPU).  Shapes not meeting the lane
+alignment fall back to the jnp oracle — correctness is never conditional on
+the fast path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.reduce_add import ref
+from repro.kernels.reduce_add.reduce_add import LANES, add_accum_2d
+
+
+def add_accum(a: jax.Array, b: jax.Array, *, accum_dtype=jnp.float32,
+              out_dtype=None, interpret: bool | None = None) -> jax.Array:
+    out_dtype = out_dtype or accum_dtype
+    if a.shape != b.shape:
+        raise ValueError(f"shape mismatch {a.shape} vs {b.shape}")
+    if a.ndim != 1 or a.shape[0] % (8 * LANES) != 0:
+        return ref.add_accum(a, b, accum_dtype=accum_dtype, out_dtype=out_dtype)
+    interpret = default_interpret() if interpret is None else interpret
+    rows = a.shape[0] // LANES
+    out = add_accum_2d(a.reshape(rows, LANES), b.reshape(rows, LANES),
+                       accum_dtype=accum_dtype, out_dtype=out_dtype,
+                       interpret=interpret)
+    return out.reshape(-1)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the reduce_add kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def add_accum(a: jax.Array, b: jax.Array, *, accum_dtype=jnp.float32,
+              out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or accum_dtype
+    return (a.astype(accum_dtype) + b.astype(accum_dtype)).astype(out_dtype)

@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOM and unsupported collectives all fail here.
+Per cell it records memory_analysis (fits 16 GB?), cost_analysis
+(FLOPs/bytes) and the parsed collective wire bytes -> the three roofline
+terms of EXPERIMENTS.md §Roofline.
+
+The two XLA_FLAGS lines above MUST run before any other import: jax locks
+the device count at first initialisation.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both \
+        --out experiments/dryrun.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
+from repro.core.overlap import AccumConfig
+from repro.core.reducer import ReduceConfig
+from repro.data import make_batch_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (Roofline, collective_wire_bytes,
+                                   model_flops_estimate)
+from repro.launch.settings import settings_for
+from repro.models import build_model
+from repro.runtime.serve_step import build_decode_step, build_prefill
+from repro.runtime.train_step import (TrainStepConfig, build_train_step,
+                                      init_train_state)
+
+HBM_PER_CHIP = 16 * 2**30
+
+
+def _abstract_batch(model, shape_cfg):
+    return model.input_specs(shape_cfg)
+
+
+def make_step_config(arch: str, overrides: dict | None = None) -> TrainStepConfig:
+    st = settings_for(arch)
+    kw = dict(dp_mode=st.dp_mode,
+              reduce=ReduceConfig(policy="fused_ring_hierarchical", chunks=2,
+                                  bucket_bytes=256 * 2**20),
+              accum=AccumConfig(microbatches=st.microbatches,
+                                policy="accumulate_then_reduce"),
+              causal_skip=False)
+    if overrides:
+        red = {k[7:]: v for k, v in overrides.items() if k.startswith("reduce_")}
+        accum = {k[6:]: v for k, v in overrides.items() if k.startswith("accum_")}
+        rest = {k: v for k, v in overrides.items()
+                if not k.startswith(("reduce_", "accum_"))}
+        if red:
+            kw["reduce"] = ReduceConfig(**{**kw["reduce"].__dict__, **red})
+        if accum:
+            kw["accum"] = AccumConfig(**{**kw["accum"].__dict__, **accum})
+        kw.update(rest)
+    return TrainStepConfig(**kw)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None):
+    """Returns (lowered, n_devices, model, shape_cfg, kind)."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shape_cfg = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    st = settings_for(arch)
+
+    with mesh:
+        if shape_cfg.kind == "train":
+            tcfg = make_step_config(arch, overrides)
+            batch_specs = make_batch_specs(model.cfg, shape_cfg, mesh)
+            step = build_train_step(model, mesh, tcfg, batch_specs,
+                                    donate=True)
+            state_abs, _ = init_train_state(model, mesh, tcfg, abstract=True)
+            batch_abs = _abstract_batch(model, shape_cfg)
+            lowered = step.lower(state_abs, batch_abs)
+        elif shape_cfg.kind == "prefill":
+            wm = st.serve_weights
+            if overrides and "serve_weights" in overrides:
+                wm = overrides["serve_weights"]
+            step, pspecs = build_prefill(model, mesh, shape_cfg,
+                                         weight_mode=wm)
+            params_abs = _abstract_serve_params(model, mesh, wm)
+            batch_abs = _abstract_batch(model, shape_cfg)
+            lowered = step.lower(params_abs, batch_abs)
+        else:  # decode
+            wm = st.serve_weights
+            if overrides and "serve_weights" in overrides:
+                wm = overrides["serve_weights"]
+            step, pspecs, _ = build_decode_step(model, mesh, shape_cfg,
+                                                weight_mode=wm)
+            params_abs = _abstract_serve_params(model, mesh, wm)
+            b = shape_cfg.global_batch
+            token = jax.ShapeDtypeStruct((b,), jnp.int32)
+            state_abs = model.abstract_decode_state(b, shape_cfg.seq_len)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = step.lower(params_abs, token, state_abs, pos)
+    return lowered, n_dev, model, shape_cfg
+
+
+def _abstract_serve_params(model, mesh, weight_mode):
+    if weight_mode == "gathered":
+        from repro.runtime.train_step import FsdpPlan, TrainStepConfig as TSC
+
+        plan = FsdpPlan(model, mesh, TSC(dp_mode="fsdp"))
+        n_dev = mesh.devices.size
+        # local shard length is n // dp_world; global flat = local * n_devices
+        groups = {name: [jax.ShapeDtypeStruct((n // plan.dp_world * n_dev,),
+                                              jnp.float32)
+                         for n in p.bucket_sizes]
+                  for name, p in plan.plans.items()}
+        return {"groups": groups}
+    return model.abstract_params()
+
+
+def _model_size(mesh) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
+def analyse(lowered, n_dev: int, model, shape_cfg) -> dict:
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    stats = collective_wire_bytes(txt)
+
+    tokens = shape_cfg.global_batch * (shape_cfg.seq_len
+                                       if shape_cfg.kind != "decode" else 1)
+    n_active = model.active_param_count()
+    mf = model_flops_estimate(n_active, tokens, shape_cfg.kind)
+    roof = Roofline(
+        flops_per_device=float(ca.get("flops", 0.0)),
+        hbm_bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        wire_bytes_per_device=stats.wire_bytes,
+        model_flops=mf,
+    )
+    mem = {
+        "argument_gb": ma.argument_size_in_bytes / 2**30,
+        "output_gb": ma.output_size_in_bytes / 2**30,
+        "temp_gb": ma.temp_size_in_bytes / 2**30,
+        "alias_gb": ma.alias_size_in_bytes / 2**30,
+    }
+    # donated inputs alias outputs: live = args + temp (+ non-aliased out)
+    live = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            + max(ma.output_size_in_bytes - ma.alias_size_in_bytes, 0))
+    mem["live_gb"] = live / 2**30
+    mem["fits_16gb"] = bool(live <= HBM_PER_CHIP)
+    return {
+        "compile_s": compile_s,
+        "memory": mem,
+        "roofline": roof.as_dict(n_dev),
+        "collectives": {"counts": stats.op_counts,
+                        "bytes": stats.op_bytes,
+                        "while_loops": stats.while_loops},
+        "params": model.param_count(),
+        "active_params": n_active,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    lowered, n_dev, model, shape_cfg = lower_cell(arch, shape_name, multi_pod,
+                                                  overrides)
+    out = analyse(lowered, n_dev, model, shape_cfg)
+    out.update({"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "devices": n_dev})
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="grad-accum slices for train cells; the dry-run "
+                         "default of 1 keeps unrolled-HLO compile times "
+                         "tractable on this 1-core container (roofline "
+                         "FLOP/byte/wire terms are accumulation-invariant)")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    cache: dict = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            cache = json.load(f)
+
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = (applicable_shapes(cfg) if args.shape == "all"
+                  else args.shape.split(","))
+        for shape_name in shapes:
+            if shape_name not in applicable_shapes(cfg):
+                print(f"[skip] {arch} x {shape_name}: inapplicable "
+                      f"(sub-quadratic rule, see DESIGN.md)")
+                continue
+            for multi in meshes:
+                key = f"{args.tag}|{arch}|{shape_name}|{'multi' if multi else 'single'}"
+                if key in cache and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[lower+compile] {key} ...", flush=True)
+                t0 = time.time()
+                try:
+                    rec = run_cell(arch, shape_name, multi,
+                                   overrides={"accum_microbatches":
+                                              args.microbatches})
+                    rec["tag"] = args.tag
+                    cache[key] = rec
+                    r = rec["roofline"]
+                    print(f"  ok in {time.time()-t0:.1f}s: "
+                          f"bottleneck={r['bottleneck']} "
+                          f"Tc={r['t_compute_s']:.4f}s Tm={r['t_memory_s']:.4f}s "
+                          f"Tx={r['t_collective_s']:.4f}s "
+                          f"live={rec['memory']['live_gb']:.2f}GB "
+                          f"fits={rec['memory']['fits_16gb']}", flush=True)
+                except Exception as e:
+                    cache[key] = {"error": str(e), "tag": args.tag,
+                                  "arch": arch, "shape": shape_name}
+                    print(f"  FAILED: {e}")
+                    traceback.print_exc()
+                with open(args.out, "w") as f:
+                    json.dump(cache, f, indent=1)
+    n_ok = sum(1 for v in cache.values() if "error" not in v)
+    n_err = sum(1 for v in cache.values() if "error" in v)
+    print(f"done: {n_ok} ok, {n_err} failed -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

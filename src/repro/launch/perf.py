@@ -1,0 +1,74 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: re-lower one cell with overrides, record under a
+tag in the shared dry-run JSON so report.py can diff baseline vs variants.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch llama3.2-1b \
+        --shape train_4k --tag wire_bf16 --set reduce_wire_dtype=bfloat16
+
+Override keys: reduce_policy, reduce_chunks, reduce_bidirectional,
+reduce_wire_dtype, reduce_bucket_bytes, accum_microbatches, accum_policy,
+causal_skip, serve_weights, fsdp_gather, gather_dtype, fsdp_bucket_bytes.
+"""
+
+import argparse
+import json
+import time
+
+
+def parse_val(v: str):
+    if v in ("true", "True"):
+        return True
+    if v in ("false", "False"):
+        return False
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="key=value override (repeatable)")
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+
+    overrides = {}
+    for kv in args.set:
+        k, _, v = kv.partition("=")
+        overrides[k] = parse_val(v)
+
+    t0 = time.time()
+    rec = run_cell(args.arch, args.shape, args.mesh == "multi", overrides)
+    rec["tag"] = args.tag
+    rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+
+    cache = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            cache = json.load(f)
+    key = f"{args.tag}|{args.arch}|{args.shape}|{args.mesh}"
+    cache[key] = rec
+    with open(args.out, "w") as f:
+        json.dump(cache, f, indent=1)
+    r = rec["roofline"]
+    print(f"[{args.tag}] {args.arch}x{args.shape}: "
+          f"Tc={r['t_compute_s']:.4f}s Tm={r['t_memory_s']:.4f}s "
+          f"Tx={r['t_collective_s']:.4f}s bottleneck={r['bottleneck']} "
+          f"frac={r['compute_fraction']:.3f} ({time.time()-t0:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

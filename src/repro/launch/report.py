@@ -1,0 +1,113 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun.json.
+
+    PYTHONPATH=src python -m repro.launch.report experiments/dryrun.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 2**30:
+        return f"{b/2**30:.2f}G"
+    if b >= 2**20:
+        return f"{b/2**20:.2f}M"
+    return f"{b/2**10:.1f}K"
+
+
+def fmt_t(s: float) -> str:
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.2f}ms"
+    return f"{s*1e6:.0f}us"
+
+
+def roofline_table(cache: dict, tag: str = "baseline",
+                   mesh: str = "single") -> str:
+    rows = []
+    header = ("| arch | shape | T_compute | T_memory | T_collective | "
+              "bottleneck | compute-frac | useful-FLOPs | wire/dev | live GB |")
+    sep = "|" + "---|" * 10
+    rows.append(header)
+    rows.append(sep)
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in ["train_4k", "prefill_32k", "decode_32k", "long_500k"]:
+            if shape not in applicable_shapes(cfg):
+                rows.append(f"| {arch} | {shape} | — | — | — | "
+                            f"skipped (full attention; DESIGN.md) | — | — | — | — |")
+                continue
+            key = f"{tag}|{arch}|{shape}|{mesh}"
+            rec = cache.get(key)
+            if rec is None:
+                rows.append(f"| {arch} | {shape} | … | … | … | pending | … | … | … | … |")
+                continue
+            if "error" in rec:
+                rows.append(f"| {arch} | {shape} | — | — | — | "
+                            f"FAILED: {rec['error'][:60]} | — | — | — | — |")
+                continue
+            r = rec["roofline"]
+            m = rec["memory"]
+            rows.append(
+                f"| {arch} | {shape} | {fmt_t(r['t_compute_s'])} | "
+                f"{fmt_t(r['t_memory_s'])} | {fmt_t(r['t_collective_s'])} | "
+                f"{r['bottleneck']} | {r['compute_fraction']:.2f} | "
+                f"{r['useful_flops_ratio']:.2f} | "
+                f"{fmt_bytes(r['wire_bytes_per_device'])} | "
+                f"{m['live_gb']:.1f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(cache: dict, tag: str = "baseline") -> str:
+    rows = ["| arch | shape | mesh | compile | FLOPs/dev | HBM bytes/dev | "
+            "wire/dev | collectives | fits 16GB |",
+            "|" + "---|" * 9]
+    for key, rec in sorted(cache.items()):
+        if not key.startswith(tag + "|") or "error" in rec:
+            continue
+        r = rec["roofline"]
+        cc = rec["collectives"]["counts"]
+        cstr = " ".join(f"{k.split('-')[0][:3]}×{v}" for k, v in sorted(cc.items()))
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+            f"{rec['compile_s']:.0f}s | {r['flops_per_device']:.2e} | "
+            f"{r['hbm_bytes_per_device']:.2e} | "
+            f"{fmt_bytes(r['wire_bytes_per_device'])} | {cstr} | "
+            f"{'✓' if rec['memory']['fits_16gb'] else 'see note'} |")
+    errs = [(k, v) for k, v in sorted(cache.items())
+            if k.startswith(tag + "|") and "error" in v]
+    for k, v in errs:
+        rows.append(f"| {v.get('arch','?')} | {v.get('shape','?')} | — | — | — "
+                    f"| — | — | FAILED: {v['error'][:80]} | — |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="*", default=["experiments/dryrun.json"])
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--section", default="both",
+                    choices=["roofline", "dryrun", "both"])
+    args = ap.parse_args()
+    cache = {}
+    paths = args.path if isinstance(args.path, list) else [args.path]
+    for p in paths:
+        import os
+        if os.path.exists(p):
+            with open(p) as f:
+                cache.update(json.load(f))
+    if args.section in ("roofline", "both"):
+        print("### Roofline (single-pod 16x16, per device)\n")
+        print(roofline_table(cache, args.tag, "single"))
+    if args.section in ("dryrun", "both"):
+        print("\n### Dry-run records (both meshes)\n")
+        print(dryrun_table(cache, args.tag))
+
+
+if __name__ == "__main__":
+    main()

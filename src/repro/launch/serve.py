@@ -1,0 +1,67 @@
+"""Serving driver: prefill+decode loop for an assigned architecture.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
+        --tokens 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs, reduced_config
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.settings import settings_for
+from repro.models import build_model
+from repro.models.transformer import init_decode_state
+from repro.runtime.serve_step import build_decode_step
+from repro.sharding import shardings_of
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--cache", type=int, default=512)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if cfg.family == "encdec":
+        raise SystemExit("enc-dec serving demo: use examples/serve_lm.py "
+                         "patterns with encdec.init_decode_state")
+    model = build_model(cfg)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    shape = ShapeConfig("serve", args.cache, args.batch, "decode")
+    wm = settings_for(args.arch).serve_weights if not args.reduced else "resident"
+    step, pspecs, sspecs = build_decode_step(model, mesh, shape,
+                                             weight_mode=wm)
+    params = model.init(jax.random.key(0))
+    with mesh:
+        params = jax.jit(lambda p: p,
+                         out_shardings=shardings_of(pspecs, mesh))(params)
+        state = init_decode_state(model.cfg, args.batch, args.cache)
+        state = jax.jit(lambda s: s,
+                        out_shardings=shardings_of(sspecs, mesh))(state)
+    token = jnp.zeros((args.batch,), jnp.int32)
+    t0 = time.time()
+    for pos in range(args.tokens):
+        with mesh:
+            logits, state = step(params, token, state, jnp.asarray(pos))
+        token = jnp.clip(jnp.argmax(logits, -1).astype(jnp.int32), 0,
+                         model.cfg.vocab_size - 1)
+    dt = time.time() - t0
+    print(f"{args.arch}: {args.tokens * args.batch / dt:.1f} tok/s "
+          f"(batch {args.batch}, cache {args.cache})")
+
+
+if __name__ == "__main__":
+    main()

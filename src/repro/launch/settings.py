@@ -1,0 +1,35 @@
+"""Per-architecture launch settings: DP mode, microbatching, serving weight
+residency.  Derived from napkin memory math against 16 GB/chip (validated by
+``memory_analysis`` in the dry-run; see EXPERIMENTS.md §Dry-run)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ArchSettings:
+    dp_mode: str            # replicated | zero1 | fsdp
+    microbatches: int       # grad-accumulation slices for train_4k
+    serve_weights: str      # resident | gathered
+
+
+SETTINGS: dict[str, ArchSettings] = {
+    # small: paper-faithful replicated / ZeRO-1 data parallelism
+    "whisper-base": ArchSettings("replicated", 1, "resident"),
+    "llama3.2-1b": ArchSettings("zero1", 1, "resident"),
+    "minicpm-2b": ArchSettings("zero1", 2, "resident"),
+    "hymba-1.5b": ArchSettings("zero1", 2, "resident"),
+    # medium/large: ZeRO-3 built from the paper's ring collectives
+    "qwen2-7b": ArchSettings("fsdp", 2, "resident"),
+    "falcon-mamba-7b": ArchSettings("fsdp", 4, "resident"),
+    "phi3-medium-14b": ArchSettings("fsdp", 4, "resident"),
+    "llava-next-34b": ArchSettings("fsdp", 8, "resident"),
+    "mixtral-8x7b": ArchSettings("fsdp", 4, "resident"),
+    # 400B: weights cannot reside on a 16-way model axis; serve gathers
+    "llama4-maverick-400b-a17b": ArchSettings("fsdp", 4, "gathered"),
+}
+
+
+def settings_for(arch: str) -> ArchSettings:
+    return SETTINGS[arch]

@@ -1,0 +1,75 @@
+"""Production train driver: ``--arch <id>`` selects an assigned architecture.
+
+On real hardware this runs under the cluster launcher (one process per
+host); on this container it runs reduced configs on host devices:
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --reduced --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, list_archs, reduced_config
+from repro.configs.base import ShapeConfig
+from repro.core.overlap import AccumConfig
+from repro.core.reducer import POLICIES, ReduceConfig
+from repro.data import DataConfig, SyntheticTokens
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.settings import settings_for
+from repro.models import build_model
+from repro.optim import OptimConfig
+from repro.runtime.train_loop import Trainer, TrainerConfig
+from repro.runtime.train_step import DP_MODES, TrainStepConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (host execution)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--policy", default="fused_ring_hierarchical",
+                    choices=POLICIES)
+    ap.add_argument("--dp-mode", default=None, choices=DP_MODES)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 mesh (needs 256 devices)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    st = settings_for(args.arch)
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_host_mesh())
+    print(f"arch={args.arch} params={model.param_count()/1e6:.1f}M "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    schedule = "wsd" if args.arch == "minicpm-2b" else "cosine"
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    data = SyntheticTokens(DataConfig(vocab_size=model.cfg.vocab_size,
+                                      seq_len=args.seq,
+                                      global_batch=args.batch),
+                           model_cfg=cfg)
+    step_cfg = TrainStepConfig(
+        dp_mode=args.dp_mode or (st.dp_mode if not args.reduced else "replicated"),
+        reduce=ReduceConfig(policy=args.policy, chunks=2,
+                            bucket_bytes=32 * 2**20),
+        optim=OptimConfig(base_lr=args.lr, warmup=min(20, args.steps // 5),
+                          schedule=schedule, total_steps=args.steps),
+        accum=AccumConfig(microbatches=1 if args.reduced else st.microbatches))
+    trainer = Trainer(model, mesh, step_cfg, data, shape,
+                      TrainerConfig(steps=args.steps, ckpt_every=50,
+                                    ckpt_dir=args.ckpt_dir, log_every=10))
+    trainer.run()
+
+
+if __name__ == "__main__":
+    main()

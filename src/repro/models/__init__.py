@@ -1,0 +1,18 @@
+"""Pure-JAX model zoo: the 10 assigned architectures as one composable stack.
+
+Families: dense GQA decoders (llama/qwen/phi/minicpm + the llava backbone),
+token-choice MoE (mixtral top-2 TP, llama4 top-1 EP with interleaved
+chunked attention), Mamba-1 SSM (falcon-mamba), parallel attn+SSM hybrid
+(hymba), and a Whisper-style encoder-decoder.  Modality frontends (audio,
+vision) are stubs per the assignment: ``input_specs()`` supplies precomputed
+frame/patch embeddings.
+
+Layers are *unrolled* (python loop), not scanned: XLA's cost analysis counts
+a ``while`` body once, which would corrupt the dry-run roofline terms
+(verified in DESIGN.md).  Smoke tests use reduced configs, so unrolling is
+cheap everywhere it runs for real.
+"""
+
+from repro.models.model_api import build_model
+
+__all__ = ["build_model"]

@@ -1,0 +1,167 @@
+"""Whisper-style encoder-decoder (audio frontend stubbed per assignment:
+``input_specs()`` provides precomputed mel-frame embeddings (B, F, d))."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.common import (dense, dense_init, embed, embed_init,
+                                 glu_mlp, glu_mlp_init, rmsnorm, rmsnorm_init,
+                                 softmax_xent)
+
+
+def _enc_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn_mod.attn_init(k1, cfg.attn, cfg.d_model, dtype=dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": glu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype=dtype)}
+
+
+def _dec_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "self_attn": attn_mod.attn_init(k1, cfg.attn, cfg.d_model, dtype=dtype),
+            "ln_x": rmsnorm_init(cfg.d_model, dtype),
+            "cross_attn": attn_mod.attn_init(k2, cfg.attn, cfg.d_model, dtype=dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": glu_mlp_init(k3, cfg.d_model, cfg.d_ff, dtype=dtype)}
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_enc = cfg.enc_layers or cfg.num_layers
+    ks = jax.random.split(key, n_enc + cfg.num_layers + 3)
+    return {
+        "enc_blocks": [_enc_block_init(ks[i], cfg, dtype) for i in range(n_enc)],
+        "enc_norm": rmsnorm_init(cfg.d_model, dtype),
+        "embed": embed_init(ks[n_enc], cfg.vocab_size, cfg.d_model, dtype=dtype),
+        "dec_blocks": [_dec_block_init(ks[n_enc + 1 + i], cfg, dtype)
+                       for i in range(cfg.num_layers)],
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": dense_init(ks[-1], cfg.d_model, cfg.vocab_size, dtype=dtype),
+    }
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig, ctx) -> jax.Array:
+    cdt = jnp.dtype(cfg.dtype)
+    x = frames.astype(cdt)
+    for bp in params["enc_blocks"]:
+        fn = lambda p_, x_: _enc_block(p_, x_, cfg, ctx)
+        if cfg.remat == "layer":
+            fn = jax.checkpoint(fn)
+        x = fn(bp, x)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _enc_block(bp, x, cfg: ModelConfig, ctx):
+    cdt = jnp.dtype(cfg.dtype)
+    h = ctx.fan_out(rmsnorm(bp["ln1"], x, cfg.norm_eps))
+    x = x + attn_mod.attn_apply(bp["attn"], h, cfg.attn, is_global=True,
+                                ctx=ctx, compute_dtype=cdt,
+                                causal=False).astype(x.dtype)
+    h = ctx.fan_out(rmsnorm(bp["ln2"], x, cfg.norm_eps))
+    return x + glu_mlp(bp["mlp"], h, cfg.act, cdt, ctx, cfg.d_ff).astype(x.dtype)
+
+
+def _dec_block(bp, x, enc_out, cfg: ModelConfig, ctx, positions, causal_skip):
+    cdt = jnp.dtype(cfg.dtype)
+    h = ctx.fan_out(rmsnorm(bp["ln1"], x, cfg.norm_eps))
+    x = x + attn_mod.attn_apply(bp["self_attn"], h, cfg.attn, is_global=True,
+                                ctx=ctx, positions=positions,
+                                compute_dtype=cdt,
+                                causal_skip=causal_skip).astype(x.dtype)
+    h = ctx.fan_out(rmsnorm(bp["ln_x"], x, cfg.norm_eps))
+    x = x + attn_mod.attn_apply(bp["cross_attn"], h, cfg.attn, is_global=True,
+                                ctx=ctx, compute_dtype=cdt, causal=False,
+                                cross_kv=ctx.fan_out(enc_out)).astype(x.dtype)
+    h = ctx.fan_out(rmsnorm(bp["ln2"], x, cfg.norm_eps))
+    return x + glu_mlp(bp["mlp"], h, cfg.act, cdt, ctx, cfg.d_ff).astype(x.dtype)
+
+
+def forward(params: dict, frames: jax.Array, tokens: jax.Array,
+            cfg: ModelConfig, *, ctx, causal_skip: bool = False) -> jax.Array:
+    cdt = jnp.dtype(cfg.dtype)
+    enc_out = encode(params, frames, cfg, ctx)
+    x = embed(params["embed"], tokens, cdt, ctx, cfg.vocab_size)
+    positions = jnp.arange(x.shape[1])
+    for bp in params["dec_blocks"]:
+        fn = lambda p_, x_: _dec_block(p_, x_, enc_out, cfg, ctx, positions,
+                                       causal_skip)
+        if cfg.remat == "layer":
+            fn = jax.checkpoint(fn)
+        x = fn(bp, x)
+    x = ctx.fan_out(rmsnorm(params["final_norm"], x, cfg.norm_eps))
+    return dense(params["lm_head"], x, cdt)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig, *, ctx,
+            causal_skip: bool = False) -> jax.Array:
+    logits = forward(params, batch["frames"], batch["tokens"], cfg, ctx=ctx,
+                     causal_skip=causal_skip)
+    return softmax_xent(logits, batch["labels"], batch.get("mask"), ctx,
+                        cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(params: dict, frames: jax.Array, cfg: ModelConfig,
+                      batch: int, seq_len: int, cache_dtype=jnp.bfloat16,
+                      ctx=None) -> list:
+    """Runs the encoder once; caches cross k/v + empty self-KV per layer."""
+    from repro.models.parallel import SINGLE
+    ctx = ctx or SINGLE
+    cdt = jnp.dtype(cfg.dtype)
+    enc_out = encode(params, frames, cfg, ctx)
+    state = []
+    for bp in params["dec_blocks"]:
+        hkv = bp["cross_attn"]["wk"]["w"].shape[1] // cfg.attn.head_dim
+        ck = attn_mod._split_heads(dense(bp["cross_attn"]["wk"], enc_out, cdt), hkv)
+        cv = attn_mod._split_heads(dense(bp["cross_attn"]["wv"], enc_out, cdt), hkv)
+        st = {"kv": attn_mod.init_cache(cfg.attn, batch, seq_len,
+                                        is_global=True, dtype=cache_dtype),
+              "cross_k": ck.astype(cache_dtype),
+              "cross_v": cv.astype(cache_dtype)}
+        state.append(st)
+    return state
+
+
+def decode_step(params: dict, token: jax.Array, state: list, pos: jax.Array,
+                cfg: ModelConfig, *, ctx) -> tuple[jax.Array, list]:
+    cdt = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], token[:, None], cdt, ctx, cfg.vocab_size)
+    new_state = []
+    for bp, st in zip(params["dec_blocks"], state):
+        st = dict(st)
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        mix, st["kv"] = attn_mod.attn_decode(bp["self_attn"], h, cfg.attn,
+                                             st["kv"], is_global=True,
+                                             ctx=ctx, pos=pos,
+                                             compute_dtype=cdt)
+        x = x + mix.astype(x.dtype)
+        h = rmsnorm(bp["ln_x"], x, cfg.norm_eps)
+        hq = bp["cross_attn"]["wq"]["w"].shape[1] // cfg.attn.head_dim
+        q = attn_mod._split_heads(dense(bp["cross_attn"]["wq"], h, cdt), hq)
+        if hq != st["cross_k"].shape[1]:
+            ck, cv = attn_mod._gather_kv_for_local_q(
+                st["cross_k"], st["cross_v"], cfg.attn, hq, ctx)
+        else:
+            ck, cv = st["cross_k"], st["cross_v"]
+        f = ck.shape[2]
+        o = attn_mod.decode_attention(q, ck, cv, jnp.asarray(f - 1),
+                                      rolling=False)
+        y = dense(bp["cross_attn"]["wo"], attn_mod._merge_heads(o), cdt)
+        if attn_mod._needs_psum(bp["cross_attn"], cfg.attn):
+            y = ctx.psum(y)
+        x = x + y.astype(x.dtype)
+        h = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        x = x + glu_mlp(bp["mlp"], h, cfg.act, cdt, ctx, cfg.d_ff).astype(x.dtype)
+        new_state.append(st)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return dense(params["lm_head"], x, cdt)[:, 0], new_state

@@ -1,0 +1,170 @@
+"""Model facade: one object per architecture with init / loss / decode /
+input_specs / param_specs — everything the launcher, dry-run and serving
+paths need, uniform across families.
+
+Vocab sizes are padded to a multiple of 128 ('guaranteed shardability' —
+labels never reference pad rows; the pad is included in reported N).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+from repro.models.parallel import SINGLE, ParallelCtx
+from repro.sharding import rules as shard_rules
+
+VOCAB_PAD_TO = 128
+
+
+def padded_vocab(v: int) -> int:
+    return int(math.ceil(v / VOCAB_PAD_TO) * VOCAB_PAD_TO)
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        self.cfg = self.cfg.with_(vocab_size=padded_vocab(self.cfg.vocab_size))
+        self._encdec = self.cfg.family == "encdec" or self.cfg.frontend == "audio_stub"
+
+    # -- params ---------------------------------------------------------------
+
+    def init(self, key) -> dict:
+        if self._encdec:
+            return encdec.init_params(key, self.cfg)
+        return transformer.init_params(key, self.cfg)
+
+    def abstract_params(self) -> dict:
+        return jax.eval_shape(lambda k: self.init(k), jax.random.key(0))
+
+    def param_specs(self, mesh: Mesh):
+        """TP-only specs: inside the fully-manual step the data axes are
+        realised by FSDP bucket shards (runtime), never by param specs."""
+        return shard_rules.param_specs(self.abstract_params(),
+                                       self.cfg.with_(sharding="tp"), mesh)
+
+    def param_count(self) -> int:
+        import math
+
+        return sum(math.prod(l.shape) for l in
+                   jax.tree.leaves(self.abstract_params()))
+
+    def active_param_count(self) -> int:
+        """MoE: only top_k of num_experts per MoE layer are active per token."""
+        total = self.param_count()
+        if self.cfg.moe is None:
+            return total
+        moe = self.cfg.moe
+        expert_leaf = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self.abstract_params())[0]:
+            keys = "/".join(shard_rules._key_name(k) for k in path)
+            if "moe" in keys and any(n in keys for n in ("w_gate", "w_up", "w_down")) \
+                    and len(leaf.shape) == 3:
+                import math
+
+                expert_leaf += math.prod(leaf.shape)
+        active_frac = moe.top_k / moe.num_experts
+        return int(total - expert_leaf * (1 - active_frac))
+
+    # -- steps -----------------------------------------------------------------
+
+    def loss_fn(self, params, batch, *, ctx: ParallelCtx = SINGLE,
+                causal_skip: bool = False, block_resolver=None):
+        if self._encdec:
+            if block_resolver is not None:
+                raise NotImplementedError(
+                    "FSDP block_resolver is decoder-only; enc-dec archs use "
+                    "tp/zero1 sharding")
+            return encdec.loss_fn(params, batch, self.cfg, ctx=ctx,
+                                  causal_skip=causal_skip)
+        return transformer.loss_fn(params, batch, self.cfg, ctx=ctx,
+                                   causal_skip=causal_skip,
+                                   block_resolver=block_resolver)
+
+    def forward(self, params, batch, *, ctx: ParallelCtx = SINGLE,
+                causal_skip: bool = False):
+        if self._encdec:
+            return encdec.forward(params, batch["frames"], batch["tokens"],
+                                  self.cfg, ctx=ctx, causal_skip=causal_skip)
+        logits, _ = transformer.forward(params, batch["tokens"], self.cfg,
+                                        ctx=ctx,
+                                        extra_embeds=batch.get("extra_embeds"),
+                                        causal_skip=causal_skip)
+        return logits
+
+    def init_decode_state(self, batch: int, seq_len: int, params=None,
+                          frames=None, ctx: ParallelCtx = SINGLE):
+        if self._encdec:
+            return encdec.init_decode_state(params, frames, self.cfg, batch,
+                                            seq_len, ctx=ctx)
+        return transformer.init_decode_state(self.cfg, batch, seq_len)
+
+    def abstract_decode_state(self, batch: int, seq_len: int):
+        if self._encdec:
+            params = self.abstract_params()
+            frames = jax.ShapeDtypeStruct(
+                (batch, self.cfg.enc_seq, self.cfg.d_model), jnp.bfloat16)
+            return jax.eval_shape(
+                lambda p, f: encdec.init_decode_state(p, f, self.cfg, batch,
+                                                      seq_len), params, frames)
+        return jax.eval_shape(
+            lambda: transformer.init_decode_state(self.cfg, batch, seq_len))
+
+    def decode_step(self, params, token, state, pos, *,
+                    ctx: ParallelCtx = SINGLE, seq_len: int | None = None,
+                    block_resolver=None):
+        if self._encdec:
+            return encdec.decode_step(params, token, state, pos, self.cfg,
+                                      ctx=ctx)
+        return transformer.decode_step(params, token, state, pos, self.cfg,
+                                       ctx=ctx, seq_len=seq_len,
+                                       block_resolver=block_resolver)
+
+    # -- shapes ------------------------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig, mesh: Mesh | None = None):
+        """ShapeDtypeStructs (+ PartitionSpecs when mesh given) for one cell."""
+        b, s = shape.global_batch, shape.seq_len
+        cfg = self.cfg
+        specs: dict[str, Any] = {}
+        pspecs: dict[str, Any] = {}
+        bspec = shard_rules.batch_spec(b, mesh) if mesh is not None else P()
+
+        if shape.kind in ("train", "prefill"):
+            if self._encdec:
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+                pspecs["frames"] = P(*(tuple(bspec) + (None, None)))
+            text = s
+            if cfg.frontend == "vision_stub" and cfg.frontend_seq:
+                text = s - cfg.frontend_seq
+                specs["extra_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.frontend_seq, cfg.d_model), jnp.bfloat16)
+                pspecs["extra_embeds"] = P(*(tuple(bspec) + (None, None)))
+            specs["tokens"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+            pspecs["tokens"] = P(*(tuple(bspec) + (None,)))
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+                pspecs["labels"] = P(*(tuple(bspec) + (None,)))
+        else:  # decode: one token against a seq_len-deep state
+            specs["token"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+            pspecs["token"] = P(*tuple(bspec)) if len(bspec) else P()
+            specs["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+            pspecs["pos"] = P()
+        if mesh is not None:
+            return specs, pspecs
+        return specs
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

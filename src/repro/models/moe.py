@@ -1,0 +1,153 @@
+"""Token-choice MoE with sort-based capacity dispatch (no fake-FLOP one-hot
+einsums — the dry-run roofline only sees real expert matmuls plus data
+movement, which is what a production dispatch does).
+
+Per batch row: route tokens to ``top_k`` experts, sort the (token, expert)
+pairs by expert, scatter into a (E, C, d) capacity buffer, run every expert
+as one batched GLU matmul, gather back with gate weights.  Tokens beyond an
+expert's capacity are dropped (standard capacity-factor semantics); a shared
+expert (llama4) adds a dense always-on path.
+
+Parallelism modes (applied by ``sharding.rules``):
+* ``ep`` — expert dim of the weights and the (E, C, d) buffer sharded over
+  "model"; GSPMD inserts the all-to-all on the buffer boundary.
+* ``tp`` — expert ffn dim sharded over "model" (for E smaller than the axis).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.common import activation, dense_init, trunc_normal
+
+
+def moe_init(key, cfg: MoEConfig, d_model: int, *, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    e, f = cfg.num_experts, cfg.expert_ff
+    std = 1.0 / math.sqrt(d_model)
+    p = {
+        "router": dense_init(k1, d_model, e, dtype=dtype),
+        "w_gate": trunc_normal(k2, (e, d_model, f), std, dtype),
+        "w_up": trunc_normal(k3, (e, d_model, f), std, dtype),
+        "w_down": trunc_normal(k4, (e, f, d_model), 1.0 / math.sqrt(f), dtype),
+    }
+    if cfg.shared_expert_ff:
+        from repro.models.common import glu_mlp_init
+
+        p["shared"] = glu_mlp_init(k5, d_model, cfg.shared_expert_ff, dtype=dtype)
+    return p
+
+
+def capacity(tokens_per_row: int, cfg: MoEConfig) -> int:
+    c = int(math.ceil(tokens_per_row * cfg.top_k * cfg.capacity_factor
+                      / cfg.num_experts))
+    return max(8, int(math.ceil(c / 8) * 8))  # sublane-aligned
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: MoEConfig, act: str, *, ctx,
+              compute_dtype=jnp.bfloat16) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    Activations are replicated over the TP axis (Megatron-style), so routing
+    and the capacity buffer are computed identically on every model rank.
+    * EP: each rank slices its expert rows from the buffer, computes them,
+      combines its partial output, and a final psum merges expert subsets.
+    * TP: every rank runs all experts on its ffn shard; psum after w_down.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = capacity(s, cfg)
+    xf = x.astype(compute_dtype)
+    e_local = p["w_gate"].shape[0]
+    f_local = p["w_gate"].shape[2]
+    ep_sharded = e_local < e
+    tp_sharded = f_local < cfg.expert_ff
+
+    logits = jnp.einsum("bsd,de->bse", xf, p["router"]["w"].astype(compute_dtype))
+    logits = logits.astype(jnp.float32)
+    gates_all = jax.nn.softmax(logits, axis=-1)                    # (B,S,E)
+    gate_vals, expert_ids = jax.lax.top_k(logits, k)               # (B,S,k)
+    if k == 1:
+        # llama4-style: sigmoid gate (renorm-softmax of one logit is a
+        # constant 1 and would starve the router of gradient)
+        gate_w = jax.nn.sigmoid(gate_vals)
+    else:
+        gate_w = jax.nn.softmax(gate_vals, axis=-1)                # mixtral renorm
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(gates_all, axis=(0, 1))                          # (E,)
+    pe = jnp.mean(
+        (jax.nn.one_hot(expert_ids, e).sum(axis=2) > 0).astype(jnp.float32),
+        axis=(0, 1))
+    aux = e * jnp.sum(me * pe)
+
+    # ---- sort-based dispatch, vmapped over batch rows ----
+    flat_ids = expert_ids.reshape(b, s * k)                        # (B, T)
+    flat_gate = gate_w.reshape(b, s * k)
+    tok_of = jnp.tile(jnp.arange(s)[:, None], (1, k)).reshape(s * k)
+    sharded = ep_sharded or tp_sharded
+    if sharded:
+        # f-boundaries: dispatch input and gate values feed rank-partial
+        # compute (local experts / local ffn shards); their cotangents are
+        # per-rank partial sums.  The router-logits path stays replicated.
+        xd = ctx.fan_out(xf)
+        flat_gate = ctx.fan_out(flat_gate)
+    else:
+        xd = xf
+
+    def dispatch_row(ids, xrow):
+        order = jnp.argsort(ids, stable=True)                      # (T,)
+        sorted_ids = ids[order]
+        starts = jnp.searchsorted(sorted_ids, jnp.arange(e))       # (E,)
+        pos_in_grp = jnp.arange(s * k) - starts[sorted_ids]
+        keep = pos_in_grp < cap
+        dest = jnp.where(keep, sorted_ids * cap + pos_in_grp, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), compute_dtype)
+        buf = buf.at[dest].set(xrow[tok_of[order]].astype(compute_dtype))
+        return buf[:-1].reshape(e, cap, d), order, dest, keep
+
+    buf, order, dest, keep = jax.vmap(dispatch_row)(flat_ids, xd)  # (B,E,C,d)
+
+    # ---- expert compute: one batched GLU over the capacity buffer ----
+    wg = p["w_gate"].astype(compute_dtype)
+    wu = p["w_up"].astype(compute_dtype)
+    wd = p["w_down"].astype(compute_dtype)
+    if ep_sharded:
+        # slice this rank's expert rows out of the (replicated) buffer
+        e0 = ctx.model_index() * e_local
+        buf_c = jax.lax.dynamic_slice_in_dim(buf, e0, e_local, axis=1)
+    else:
+        buf_c = buf
+    h = activation(act)(jnp.einsum("becd,edf->becf", buf_c, wg)) * \
+        jnp.einsum("becd,edf->becf", buf_c, wu)
+    out_buf = jnp.einsum("becf,efd->becd", h, wd)            # (B,E_l,C,d)
+    if ep_sharded:
+        # scatter local experts' outputs back into the full-E layout; the
+        # final psum (below) merges the disjoint expert subsets.
+        full = jnp.zeros((b, e, cap, d), out_buf.dtype)
+        out_buf = jax.lax.dynamic_update_slice_in_dim(full, out_buf, e0, axis=1)
+
+    # ---- combine: gather back and weight by gates ----
+    def combine_row(obuf, order_r, dest_r, keep_r, gate_r):
+        flat = obuf.reshape(e * cap, d)
+        vals = flat[jnp.minimum(dest_r, e * cap - 1)]              # (T, d)
+        vals = vals * keep_r[:, None].astype(vals.dtype)
+        g = gate_r[order_r][:, None].astype(vals.dtype)
+        y = jnp.zeros((s, d), vals.dtype)
+        return y.at[tok_of[order_r]].add(vals * g)
+
+    y = jax.vmap(combine_row)(out_buf, order, dest, keep, flat_gate)
+    if ep_sharded or tp_sharded:
+        y = ctx.psum(y)
+
+    if "shared" in p:
+        from repro.models.common import glu_mlp
+
+        xs = ctx.fan_out(xf) if p["shared"]["w_down"]["w"].shape[0] <             cfg.shared_expert_ff else xf
+        y = y + glu_mlp(p["shared"], xs, act, compute_dtype, ctx,
+                        cfg.shared_expert_ff)
+    return y.astype(x.dtype), aux

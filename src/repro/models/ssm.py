@@ -1,0 +1,147 @@
+"""Mamba-1 selective SSM block (falcon-mamba / hymba's SSM heads).
+
+TPU adaptation: the CUDA selective-scan kernel becomes a
+``jax.lax.associative_scan`` over time — log-depth, MXU/VPU-friendly, and
+(unlike ``scan``) fully visible to the dry-run cost analysis.  The inner
+dimension ``d_inner`` is tensor-parallel over "model" (in_proj col-parallel,
+out_proj row-parallel; conv/scan are elementwise in ``d_inner``), which also
+bounds the (B, S, d_inner/shards, N) scan intermediates per device.
+
+Decode keeps O(1) state: ``h`` (B, d_inner, N) + a (conv_width-1)-tap conv
+tail — the property that makes ``long_500k`` feasible.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.common import dense, dense_init, trunc_normal
+
+
+def ssm_dims(cfg: SSMConfig, d_model: int) -> tuple[int, int]:
+    d_inner = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or int(math.ceil(d_model / 16))
+    return d_inner, dt_rank
+
+
+def ssm_init(key, cfg: SSMConfig, d_model: int, *, dtype=jnp.float32) -> dict:
+    d_inner, dt_rank = ssm_dims(cfg, d_model)
+    n = cfg.state_dim
+    ks = jax.random.split(key, 7)
+    # S4D-real initialisation for A
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (d_inner, 1))
+    return {
+        # split x/z projections so TP shards each branch contiguously
+        "in_proj_x": dense_init(ks[0], d_model, d_inner, dtype=dtype),
+        "in_proj_z": dense_init(ks[5], d_model, d_inner, dtype=dtype),
+        "conv_w": trunc_normal(ks[1], (cfg.conv_width, d_inner),
+                               1.0 / math.sqrt(cfg.conv_width), dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * n, dtype=dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dtype=dtype, bias=True),
+        "a_log": jnp.log(a).astype(dtype),
+        "d_skip": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[4], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv over time. x: (B,S,D); w: (W,D); tail: (B,W-1,D)."""
+    width = w.shape[0]
+    pad = tail if tail is not None else jnp.zeros(
+        (x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+W-1, D)
+    out = jnp.zeros_like(x)
+    for t in range(width):
+        out = out + xp[:, t:t + x.shape[1]] * w[t][None, None, :]
+    return out + b[None, None, :]
+
+
+def _ssm_params(p: dict, xc: jax.Array, cfg: SSMConfig, dt_rank: int,
+                compute_dtype, ctx, sharded: bool):
+    """Input-dependent (delta, B, C) from the conv'd activation (B,S,Din).
+    ``x_proj`` is row-parallel under TP: psum completes the contraction."""
+    n = cfg.state_dim
+    proj = dense(p["x_proj"], xc, compute_dtype)
+    if sharded:
+        # g then f: the psum'd projection is consumed by rank-sharded
+        # (Din-local) scan branches, so its cotangent must be re-psum'd
+        proj = ctx.fan_out(ctx.psum(proj))
+    dt_raw, b_ssm, c_ssm = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(dense(p["dt_proj"], dt_raw, compute_dtype)
+                            .astype(jnp.float32))           # (B,S,Din)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))             # (Din,N)
+    return delta, a, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+
+def ssm_apply(p: dict, x: jax.Array, cfg: SSMConfig, *, ctx,
+              compute_dtype=jnp.bfloat16, d_model: int | None = None) -> jax.Array:
+    """Full-sequence selective scan. x: (B, S, d_model).  Weights may be
+    local TP shards of ``d_inner``; row-parallel outputs are psum'd."""
+    d_inner = p["conv_w"].shape[1]
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    sharded = d_inner < cfg.expand * (d_model or x.shape[-1])
+    xpart = dense(p["in_proj_x"], x, compute_dtype)          # (B,S,Din_local)
+    z = dense(p["in_proj_z"], x, compute_dtype)
+    xc = jax.nn.silu(_causal_conv(xpart, p["conv_w"].astype(compute_dtype),
+                                  p["conv_b"].astype(compute_dtype)))
+    delta, a, b_ssm, c_ssm = _ssm_params(p, xc, cfg, dt_rank, compute_dtype,
+                                         ctx, sharded)
+
+    # discretise: abar = exp(delta*A) (B,S,Din,N); bbar*x = delta*B*x
+    xf = xc.astype(jnp.float32)
+    abar = jnp.exp(delta[..., None] * a[None, None])                    # (B,S,Din,N)
+    bx = (delta * xf)[..., None] * b_ssm[:, :, None, :]                 # (B,S,Din,N)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (abar, bx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, c_ssm)                          # (B,S,Din)
+    y = y + xf * p["d_skip"].astype(jnp.float32)[None, None, :]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(p["out_proj"], y.astype(compute_dtype), compute_dtype)
+    return ctx.psum(out) if sharded else out
+
+
+def ssm_decode(p: dict, x1: jax.Array, cfg: SSMConfig, state: dict, *, ctx,
+               compute_dtype=jnp.bfloat16, d_model: int | None = None
+               ) -> tuple[jax.Array, dict]:
+    """One-token step. state: {"h": (B,Din,N), "conv": (B,W-1,Din)}."""
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    d_inner = p["conv_w"].shape[1]
+    sharded = d_inner < cfg.expand * (d_model or x1.shape[-1])
+    xpart = dense(p["in_proj_x"], x1, compute_dtype)         # (B,1,Din_local)
+    z = dense(p["in_proj_z"], x1, compute_dtype)
+    xc = jax.nn.silu(_causal_conv(xpart, p["conv_w"].astype(compute_dtype),
+                                  p["conv_b"].astype(compute_dtype),
+                                  tail=state["conv"].astype(compute_dtype)))
+    new_conv = jnp.concatenate([state["conv"][:, 1:],
+                                xpart.astype(state["conv"].dtype)], axis=1)
+    delta, a, b_ssm, c_ssm = _ssm_params(p, xc, cfg, dt_rank, compute_dtype,
+                                         ctx, sharded)
+    xf = xc.astype(jnp.float32)
+    abar = jnp.exp(delta[:, 0, :, None] * a[None])           # (B,Din,N)
+    bx = (delta * xf)[:, 0, :, None] * b_ssm[:, 0, None, :]
+    h = state["h"].astype(jnp.float32) * abar + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0])[:, None, :]
+    y = y + xf * p["d_skip"].astype(jnp.float32)[None, None, :]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(p["out_proj"], y.astype(compute_dtype), compute_dtype)
+    if sharded:
+        out = ctx.psum(out)
+    return out, {"h": h.astype(state["h"].dtype), "conv": new_conv}
+
+
+def init_ssm_state(cfg: SSMConfig, d_model: int, batch: int,
+                   dtype=jnp.float32) -> dict:
+    d_inner, _ = ssm_dims(cfg, d_model)
+    return {"h": jnp.zeros((batch, d_inner, cfg.state_dim), dtype),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, d_inner), dtype)}

@@ -1,0 +1,8 @@
+from repro.optim.adamw import (OptimConfig, adamw_flat_update, adamw_tree_update,
+                               global_grad_norm, init_opt_state,
+                               init_opt_state_flat)
+from repro.optim.schedules import make_schedule
+
+__all__ = ["OptimConfig", "adamw_flat_update", "adamw_tree_update",
+           "global_grad_norm", "init_opt_state", "init_opt_state_flat",
+           "make_schedule"]

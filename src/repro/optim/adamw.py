@@ -1,0 +1,109 @@
+"""AdamW for tree-form and flat-bucket-shard (ZeRO) states.
+
+Two entry points used by the train-step builders:
+
+* ``adamw_tree_update``   — classic replicated-DP update over param pytrees.
+* ``adamw_flat_update``   — operates on 1-D bucket *shards* (the reducer's
+  reduce-scatter output); returns the parameter *delta* so ZeRO modes can
+  all-gather the delta and apply it to full params (decoupled weight decay
+  is applied outside on the params directly).
+
+Global-norm clipping must know which leaves are TP-sharded (their sum-sq is
+psum'd over the model axis; replicated leaves are counted once) — pass the
+param PartitionSpecs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import MODEL_AXIS
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    base_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"          # constant | linear | cosine | wsd
+    warmup: int = 100
+    total_steps: int = 1000
+
+
+def init_opt_state(params):
+    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), t)
+    return {"mu": zeros(params), "nu": zeros(params)}
+
+
+def init_opt_state_flat(shards: list):
+    return {"mu": [jnp.zeros_like(s, dtype=jnp.float32) for s in shards],
+            "nu": [jnp.zeros_like(s, dtype=jnp.float32) for s in shards]}
+
+
+def global_grad_norm(grads, specs, ctx):
+    """Global L2 norm with model-axis-aware accounting."""
+    flat_g, _ = jax.tree_util.tree_flatten(grads)
+    flat_s, _ = jax.tree_util.tree_flatten(specs,
+                                           is_leaf=lambda x: isinstance(
+                                               x, jax.sharding.PartitionSpec))
+    sharded_sq = jnp.zeros((), jnp.float32)
+    local_sq = jnp.zeros((), jnp.float32)
+    for g, s in zip(flat_g, flat_s):
+        ss = jnp.sum(jnp.square(g.astype(jnp.float32)))
+        if any(MODEL_AXIS in (ax if isinstance(ax, tuple) else (ax,))
+               for ax in s if ax is not None):
+            sharded_sq = sharded_sq + ss
+        else:
+            local_sq = local_sq + ss
+    return jnp.sqrt(ctx.psum(sharded_sq) + local_sq)
+
+
+def clip_factor(gnorm, max_norm: float):
+    return jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+
+
+def _adamw_moments(g, mu, nu, step, cfg: OptimConfig):
+    g = g.astype(jnp.float32)
+    mu = cfg.b1 * mu + (1 - cfg.b1) * g
+    nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+    t = step.astype(jnp.float32) + 1.0
+    mu_hat = mu / (1 - cfg.b1 ** t)
+    nu_hat = nu / (1 - cfg.b2 ** t)
+    upd = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+    return upd, mu, nu
+
+
+def adamw_tree_update(params, grads, opt_state, step, lr, cfg: OptimConfig):
+    """Replicated update: params' = (1 - lr*wd) * params - lr * adam(grads)."""
+    lp, treedef = jax.tree_util.tree_flatten(params)
+    lg = treedef.flatten_up_to(grads)
+    lmu = treedef.flatten_up_to(opt_state["mu"])
+    lnu = treedef.flatten_up_to(opt_state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(lp, lg, lmu, lnu):
+        upd, mu2, nu2 = _adamw_moments(g, mu, nu, step, cfg)
+        p2 = p.astype(jnp.float32) * (1 - lr * cfg.weight_decay) - lr * upd
+        new_p.append(p2.astype(p.dtype))
+        new_mu.append(mu2)
+        new_nu.append(nu2)
+    unf = treedef.unflatten
+    return unf(new_p), {"mu": unf(new_mu), "nu": unf(new_nu)}
+
+
+def adamw_flat_update(grad_shards: list, opt_state: dict, step, lr,
+                      cfg: OptimConfig):
+    """ZeRO update on flat bucket shards.  Returns (deltas, new_opt_state);
+    delta = -lr * adam_update (weight decay applied to params outside)."""
+    deltas, mus, nus = [], [], []
+    for g, mu, nu in zip(grad_shards, opt_state["mu"], opt_state["nu"]):
+        upd, mu2, nu2 = _adamw_moments(g, mu, nu, step, cfg)
+        deltas.append(-lr * upd)
+        mus.append(mu2)
+        nus.append(nu2)
+    return deltas, {"mu": mus, "nu": nus}

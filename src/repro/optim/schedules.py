@@ -1,0 +1,44 @@
+"""LR schedules: warmup-cosine (default), WSD (minicpm), constant, linear."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(name: str, *, base_lr: float, warmup: int = 100,
+                  total: int = 1000, stable_frac: float = 0.8,
+                  min_frac: float = 0.1):
+    """Returns ``fn(step) -> lr`` (jnp-traceable)."""
+    w = max(warmup, 1)
+
+    def warm(step):
+        return jnp.minimum(step / w, 1.0)
+
+    if name == "constant":
+        return lambda step: base_lr * warm(step)
+
+    if name == "linear":
+        def lin(step):
+            t = jnp.clip((step - w) / max(total - w, 1), 0.0, 1.0)
+            return base_lr * warm(step) * (1 - (1 - min_frac) * t)
+        return lin
+
+    if name == "cosine":
+        def cos(step):
+            t = jnp.clip((step - w) / max(total - w, 1), 0.0, 1.0)
+            return base_lr * warm(step) * (min_frac + (1 - min_frac) * 0.5 *
+                                           (1 + jnp.cos(jnp.pi * t)))
+        return cos
+
+    if name == "wsd":
+        # Warmup -> Stable (constant) -> Decay (1-sqrt, per minicpm)
+        stable_end = w + int((total - w) * stable_frac)
+
+        def wsd(step):
+            decay_t = jnp.clip((step - stable_end) / max(total - stable_end, 1),
+                               0.0, 1.0)
+            decay = 1.0 - (1.0 - min_frac) * jnp.sqrt(decay_t)
+            return base_lr * warm(step) * jnp.where(step < stable_end, 1.0, decay)
+        return wsd
+
+    raise ValueError(f"unknown schedule {name!r}")

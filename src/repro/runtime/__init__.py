@@ -1,0 +1,5 @@
+from repro.runtime.train_step import TrainStepConfig, build_train_step, init_train_state
+from repro.runtime.serve_step import build_decode_step, build_prefill
+
+__all__ = ["TrainStepConfig", "build_train_step", "init_train_state",
+           "build_decode_step", "build_prefill"]

@@ -1,0 +1,106 @@
+"""Fault tolerance: straggler detection, heartbeats, elastic re-meshing.
+
+On a real multi-pod deployment these hook into the cluster scheduler; here
+they are host-level components with the same decision logic, exercised by
+the FT tests via simulated failures.
+
+* ``StragglerMonitor`` — EWMA of step wall-times; flags steps slower than
+  ``threshold x`` the running estimate.  At scale the flagged rank triggers
+  (a) re-dispatch of its shard (synchronous recovery) or (b) its removal at
+  the next elastic boundary; here we count + expose events.
+* ``Heartbeat`` — liveness file per host; ``dead_hosts`` reports hosts whose
+  beat is older than the timeout (scheduler would drain them).
+* ``elastic_remesh`` — rebuilds the largest usable (data, model) mesh from
+  the surviving device count; training resumes from the latest committed
+  checkpoint (global arrays reshard transparently in the manual step).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+
+import jax
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 2.0
+    decay: float = 0.9
+    warmup_steps: int = 3
+    _ewma: float | None = None
+    _steps: int = 0
+    events: list = field(default_factory=list)
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True when this step is flagged as a straggler."""
+        self._steps += 1
+        if self._ewma is None:
+            self._ewma = seconds
+            return False
+        flagged = (self._steps > self.warmup_steps
+                   and seconds > self.threshold * self._ewma)
+        if flagged:
+            self.events.append((step, seconds, self._ewma))
+        else:
+            # stragglers are excluded from the estimate (they'd poison it)
+            self._ewma = self.decay * self._ewma + (1 - self.decay) * seconds
+        return flagged
+
+
+class Heartbeat:
+    """File-based liveness beacons (one per host)."""
+
+    def __init__(self, beat_dir: str, host_id: str, timeout: float = 60.0):
+        self.beat_dir = beat_dir
+        self.host_id = host_id
+        self.timeout = timeout
+        os.makedirs(beat_dir, exist_ok=True)
+
+    def beat(self, now: float | None = None):
+        now = time.time() if now is None else now
+        with open(os.path.join(self.beat_dir, f"{self.host_id}.beat"), "w") as f:
+            f.write(f"{now:.3f}\n")
+
+    def dead_hosts(self, now: float | None = None) -> list[str]:
+        now = time.time() if now is None else now
+        dead = []
+        for name in os.listdir(self.beat_dir):
+            if not name.endswith(".beat"):
+                continue
+            with open(os.path.join(self.beat_dir, name)) as f:
+                last = float(f.read().strip() or 0)
+            if now - last > self.timeout:
+                dead.append(name[:-5])
+        return sorted(dead)
+
+
+def elastic_shape(n_devices: int, *, model_parallel: int = 16,
+                  want_pods: int = 1) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest (pod, data, model) shape that fits ``n_devices`` surviving
+    devices, shrinking data-parallelism first (the dimension the synchronous
+    SGD math tolerates: global batch per step shrinks, semantics don't)."""
+    model = model_parallel
+    while model > 1 and n_devices % model != 0:
+        model //= 2
+    rest = n_devices // model
+    pods = want_pods
+    while pods > 1 and rest % pods != 0:
+        pods -= 1
+    data = rest // pods
+    if data < 1:
+        raise ValueError(f"cannot build a mesh from {n_devices} devices")
+    shape = (pods, data, model) if pods > 1 else (data, model)
+    names = ("pod", "data", "model") if pods > 1 else ("data", "model")
+    return shape, names
+
+
+def elastic_remesh(n_devices: int, *, model_parallel: int = 16,
+                   want_pods: int = 1):
+    shape, names = elastic_shape(n_devices, model_parallel=model_parallel,
+                                 want_pods=want_pods)
+    from jax.sharding import AxisType
+
+    return jax.make_mesh(shape, names,
+                         axis_types=(AxisType.Auto,) * len(shape))

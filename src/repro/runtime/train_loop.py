@@ -1,0 +1,89 @@
+"""Trainer: steps, metrics, checkpoint-restart, straggler accounting.
+
+The fault-tolerance contract: every ``ckpt_every`` steps the full train
+state is saved (atomically, async); on construction the trainer resumes
+from the newest committed step.  Data is stateless-deterministic, so resume
+== replay from the same step on any mesh that can hold the state.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticTokens, make_batch_specs
+from repro.models.model_api import Model
+from repro.runtime.ft import StragglerMonitor
+from repro.runtime.train_step import (TrainStepConfig, build_train_step,
+                                      init_train_state)
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model: Model, mesh, step_cfg: TrainStepConfig,
+                 data: SyntheticTokens, shape_cfg, tcfg: TrainerConfig,
+                 log: Callable[[str], None] = print):
+        self.model = model
+        self.mesh = mesh
+        self.step_cfg = step_cfg
+        self.data = data
+        self.tcfg = tcfg
+        self.log = log
+        self.monitor = StragglerMonitor()
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir)
+                     if tcfg.ckpt_dir else None)
+
+        batch_specs = make_batch_specs(model.cfg, shape_cfg, mesh)
+        with mesh:
+            self.step_fn = build_train_step(model, mesh, step_cfg, batch_specs)
+            state, self.state_specs = init_train_state(
+                model, mesh, step_cfg, key=jax.random.key(tcfg.seed))
+        self.state = state
+        self.start_step = 0
+        if self.ckpt is not None:
+            restored, step = self.ckpt.restore_latest(self.state)
+            if restored is not None:
+                self.state = restored
+                self.start_step = int(step)
+                self.log(f"[trainer] resumed from step {step}")
+
+    def run(self) -> dict:
+        history: list[dict] = []
+        t_total = time.time()
+        for step in range(self.start_step, self.tcfg.steps):
+            batch = self.data.batch_at(step)
+            t0 = time.time()
+            with self.mesh:
+                self.state, metrics = self.step_fn(self.state, batch)
+            loss = float(metrics["loss"])          # blocks on completion
+            dt = time.time() - t0
+            straggler = self.monitor.record(step, dt)
+            rec = {"step": step, "loss": loss,
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "lr": float(metrics["lr"]), "sec": dt,
+                   "straggler": straggler}
+            history.append(rec)
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps - 1:
+                self.log(f"[train] step {step:5d} loss {loss:.4f} "
+                         f"gnorm {rec['grad_norm']:.3f} lr {rec['lr']:.2e} "
+                         f"{dt*1e3:.0f} ms" + (" STRAGGLER" if straggler else ""))
+            if self.ckpt is not None and (step + 1) % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(self.state, step + 1)
+        if self.ckpt is not None:
+            self.ckpt.save(self.state, self.tcfg.steps)
+            self.ckpt.wait()
+        return {"history": history, "wall": time.time() - t_total,
+                "straggler_events": self.monitor.events}

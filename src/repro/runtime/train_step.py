@@ -1,0 +1,491 @@
+"""Train-step builders: the paper's communication engine fused into a
+fully-manual SPMD step.
+
+The step runs inside ``jax.shard_map`` with **every** mesh axis manual:
+tensor parallelism is explicit (``ParallelCtx.psum`` in the models), and the
+data-parallel gradient reduction is *our* ring schedule — XLA never inserts
+an opaque grad all-reduce, so §Perf before/after measures the paper's
+technique and nothing else.
+
+DP modes (rungs of the paper's ladder):
+
+* ``replicated`` — params + optimizer state replicated over data; grads
+  all-reduced (mean) by the ``GradientReducer``.  The 2017 paper's setting.
+* ``zero1``      — grads *reduce-scattered* into flat bucket shards; AdamW
+  updates the shard; the param **delta** is ring-all-gathered and applied.
+  Same comm volume as all-reduce (RS+AG), optimizer memory / dp_world.
+* ``fsdp``       — ZeRO-3: per-layer-group params stored as flat bucket
+  shards; each rematerialised layer ring-all-gathers its bf16 weights on
+  entry, and the *autodiff transpose of that gather is exactly the ring
+  reduce-scatter*, so gradients arrive pre-sharded for free.  Built entirely
+  from the paper's collectives.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import numpy as np
+
+from repro.core import ring as ring_lib
+from repro.core.bucketing import BucketPlan, GradientBucketer
+from repro.core.overlap import AccumConfig, accumulate_and_reduce
+from repro.core.reducer import GradientReducer, ReduceConfig
+from repro.models.model_api import Model
+from repro.models.parallel import ParallelCtx
+from repro.optim import (OptimConfig, adamw_flat_update, adamw_tree_update,
+                         init_opt_state, make_schedule)
+from repro.optim.adamw import clip_factor, global_grad_norm
+from repro.sharding import rules as shard_rules
+from repro.sharding.rules import MODEL_AXIS
+
+DP_MODES = ("replicated", "zero1", "fsdp")
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    dp_mode: str = "replicated"
+    reduce: ReduceConfig = field(default_factory=ReduceConfig)
+    optim: OptimConfig = field(default_factory=OptimConfig)
+    accum: AccumConfig = field(default_factory=AccumConfig)
+    causal_skip: bool = False
+    gather_dtype: str = "bfloat16"     # fsdp weight-gather wire dtype
+    fsdp_bucket_bytes: int = 512 * 2**20
+    fsdp_gather: str = "native"        # "native" (one all-gather op) | "ring"
+                                       # (our unrolled schedule; hillclimb knob)
+
+
+# ---------------------------------------------------------------------------
+# mesh helpers
+# ---------------------------------------------------------------------------
+
+
+def _mesh_axes(mesh: Mesh) -> tuple[tuple[str, ...], str | None]:
+    names = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    model_axis = "model" if "model" in names else None
+    return data_axes, model_axis
+
+
+def make_ctx(mesh: Mesh) -> ParallelCtx:
+    data_axes, model_axis = _mesh_axes(mesh)
+    return ParallelCtx(model_axis=model_axis, data_axes=data_axes)
+
+
+def _sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _flat_spec(mesh: Mesh) -> P:
+    return P(tuple(mesh.axis_names))
+
+
+def build_reducer(model: Model, mesh: Mesh, cfg: TrainStepConfig) -> GradientReducer:
+    data_axes, _ = _mesh_axes(mesh)
+    rcfg = ReduceConfig(**{**cfg.reduce.__dict__, "data_axes": data_axes})
+    return GradientReducer(mesh, rcfg)
+
+
+def _local_shapes(tree_abs, specs, mesh: Mesh):
+    """Per-device shapes given PartitionSpecs (all axes manual)."""
+    sizes = _sizes(mesh)
+
+    def shrink(leaf, spec):
+        shape = list(leaf.shape)
+        for d, ax in enumerate(spec):
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                shape[d] //= sizes[a]
+        return jax.ShapeDtypeStruct(tuple(shape), leaf.dtype)
+
+    return jax.tree.map(shrink, tree_abs, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _slice_to_local(tree_full, specs):
+    """Inside manual shard_map: slice full arrays down to this device's shard."""
+    def one(leaf, spec):
+        for d, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            idx = jnp.zeros((), jnp.int32)
+            p = 1
+            for a in axes:
+                idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+                p *= jax.lax.axis_size(a)
+            seg = leaf.shape[d] // p
+            leaf = jax.lax.dynamic_slice_in_dim(leaf, idx * seg, seg, axis=d)
+        return leaf
+
+    return jax.tree.map(one, tree_full, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# norm-accounting weights: model-replicated fields must be counted once in
+# the global grad norm, not model_size times (kv projections replicate)
+# ---------------------------------------------------------------------------
+
+
+def build_norm_weights(plan: BucketPlan, specs_flat: list, model_size: int
+                       ) -> list[np.ndarray]:
+    """Per-bucket fp32 weight vector: 1.0 on model-sharded fields,
+    1/model_size on replicated fields (so a psum over the model axis counts
+    each parameter exactly once)."""
+    rep_w = 1.0 / max(model_size, 1)
+    weights = [np.full((n,), rep_w, np.float32) for n in plan.bucket_sizes]
+    for f in plan.fields:
+        spec = specs_flat[f.leaf]
+        sharded = any(MODEL_AXIS in (ax if isinstance(ax, tuple) else (ax,))
+                      for ax in spec if ax is not None)
+        if sharded:
+            weights[f.bucket][f.offset:f.offset + f.size] = 1.0
+    return weights
+
+
+def _slice_like_shard(w: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """Slice a per-bucket weight vector down to this rank's RS-shard, using
+    the same ownership layout as hierarchical reduce-scatter (inner axis
+    segments first)."""
+    for ax in axes:
+        p = jax.lax.axis_size(ax)
+        r = jax.lax.axis_index(ax)
+        seg = w.shape[0] // p
+        w = jax.lax.dynamic_slice_in_dim(w, r * seg, seg)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# fsdp (ZeRO-3) planning
+# ---------------------------------------------------------------------------
+
+
+class FsdpPlan:
+    """Per-group flat-bucket layout: every block (and each root entry) is
+    bucketised separately so layers gather/release independently inside
+    their remat boundary."""
+
+    def __init__(self, model: Model, mesh: Mesh, cfg: TrainStepConfig):
+        self.model = model
+        self.mesh = mesh
+        self.gather_impl = cfg.fsdp_gather
+        data_axes, _ = _mesh_axes(mesh)
+        self.data_axes = data_axes
+        sizes = _sizes(mesh)
+        self.dp_world = 1
+        for a in data_axes:
+            self.dp_world *= sizes[a]
+        rcfg = cfg.reduce.ring_config()
+        pad = rcfg.flat_divisor([sizes[a] for a in data_axes])
+        self.ring_cfg = rcfg
+        self.bucketer = GradientBucketer(bucket_bytes=cfg.fsdp_bucket_bytes,
+                                         pad_multiple=pad)
+        self.pspecs = model.param_specs(mesh)
+        local = _local_shapes(model.abstract_params(), self.pspecs, mesh)
+        self.local_abs = local
+        self.block_keys = [k for k in ("blocks", "enc_blocks", "dec_blocks")
+                           if isinstance(local, dict) and k in local]
+        self.groups: dict[str, Any] = {}
+        for k in local:
+            if k in self.block_keys:
+                for i, blk in enumerate(local[k]):
+                    self.groups[f"{k}.{i}"] = blk
+            else:
+                self.groups[f"root.{k}"] = local[k]
+        self.plans = {name: self.bucketer.plan(tree)
+                      for name, tree in self.groups.items()}
+        # static norm-accounting weights per group (model-replication aware)
+        msize = sizes.get("model", 1)
+        self.norm_weights = {}
+        for name in self.groups:
+            spec_tree = self._group_of_tree(self.pspecs, name)
+            sflat = jax.tree_util.tree_flatten(
+                spec_tree, is_leaf=lambda x: isinstance(x, P))[0]
+            self.norm_weights[name] = build_norm_weights(
+                self.plans[name], sflat, msize)
+
+    @staticmethod
+    def _group_of_tree(tree, name):
+        kind, _, idx = name.partition(".")
+        if kind in ("blocks", "enc_blocks", "dec_blocks"):
+            return tree[kind][int(idx)]
+        return tree[idx]
+
+    # inside manual shard_map -------------------------------------------------
+
+    def shard_group(self, tree_local, name):
+        """Local-model group tree -> flat shards over the data axes."""
+        buckets, _ = self.bucketer.bucketize(tree_local, self.plans[name])
+        out = []
+        for b in buckets:
+            for ax in reversed(self.data_axes):      # outermost segment first
+                p = jax.lax.axis_size(ax)
+                r = jax.lax.axis_index(ax)
+                seg = b.shape[0] // p
+                b = jax.lax.dynamic_slice_in_dim(b, r * seg, seg)
+            out.append(b)
+        return out
+
+    def gather_group(self, shards, name, dtype=None):
+        """Flat shards -> full group tree via all-gather over the data axes.
+
+        ``native``: one XLA all-gather op per bucket per axis (transpose =
+        psum_scatter).  ``ring``: our unrolled ppermute schedule (transpose
+        == ring reduce-scatter-sum, verified) — exposes every hop to the
+        scheduler/roofline at the cost of much larger HLO.
+        """
+        full = []
+        for s in shards:
+            if dtype is not None:
+                s = s.astype(dtype)
+            for ax in self.data_axes:                # pod first, data last
+                if self.gather_impl == "ring":
+                    s = ring_lib.ring_all_gather(s, ax, self.ring_cfg)
+                else:
+                    s = jax.lax.all_gather(s, ax, tiled=True)
+            full.append(s)
+        return self.bucketer.debucketize(full, self.plans[name],
+                                         cast_to=dtype)
+
+    def shard_state(self, params_local):
+        groups = {}
+        for name in self.groups:
+            groups[name] = self.shard_group(self._group_of(params_local, name),
+                                            name)
+        return groups
+
+    def _group_of(self, params, name):
+        kind, _, idx = name.partition(".")
+        if kind in ("blocks", "enc_blocks", "dec_blocks"):
+            return params[kind][int(idx)]
+        return params[idx]
+
+    def params_and_resolver(self, groups, dtype):
+        """Root groups gathered eagerly; blocks left as shard lists with a
+        resolver the model calls inside each layer's remat boundary."""
+        params: dict = {}
+        for name, shards in groups.items():
+            kind, _, idx = name.partition(".")
+            if kind == "root":
+                params[idx] = self.gather_group(shards, name, dtype)
+        for k in self.block_keys:
+            n = len([1 for name in groups if name.startswith(k + ".")])
+            params[k] = [groups[f"{k}.{i}"] for i in range(n)]
+
+        def resolver(kind: str, i: int, shards):
+            return self.gather_group(shards, f"{kind}.{i}", dtype)
+
+        return params, resolver
+
+
+# ---------------------------------------------------------------------------
+# state init
+# ---------------------------------------------------------------------------
+
+
+def init_train_state(model: Model, mesh: Mesh, cfg: TrainStepConfig,
+                     key=None, abstract: bool = False):
+    """Returns (state, state_specs).  ``abstract=True`` -> ShapeDtypeStructs."""
+    pspecs = model.param_specs(mesh)
+    flat = _flat_spec(mesh)
+    key = key if key is not None else jax.random.key(0)
+
+    if cfg.dp_mode == "replicated":
+        specs = {"params": pspecs, "opt": {"mu": pspecs, "nu": pspecs},
+                 "step": P()}
+
+        def mk(k):
+            p_local = _slice_to_local(model.init(k), pspecs)
+            return {"params": p_local, "opt": init_opt_state(p_local),
+                    "step": jnp.zeros((), jnp.int32)}
+
+    elif cfg.dp_mode == "zero1":
+        reducer = build_reducer(model, mesh, cfg)
+        local = _local_shapes(model.abstract_params(), pspecs, mesh)
+        plan = reducer.bucketer.plan(local)
+        shard_sizes = [n // reducer.world for n in plan.bucket_sizes]
+        specs = {"params": pspecs,
+                 "opt": {"mu": [flat] * len(shard_sizes),
+                         "nu": [flat] * len(shard_sizes)},
+                 "step": P()}
+
+        def mk(k):
+            p_local = _slice_to_local(model.init(k), pspecs)
+            zeros = lambda: [jnp.zeros((n,), jnp.float32) for n in shard_sizes]
+            return {"params": p_local, "opt": {"mu": zeros(), "nu": zeros()},
+                    "step": jnp.zeros((), jnp.int32)}
+
+    elif cfg.dp_mode == "fsdp":
+        plan = FsdpPlan(model, mesh, cfg)
+        spec_groups = {name: [flat] * plan.plans[name].n_buckets
+                       for name in plan.groups}
+        specs = {"groups": spec_groups,
+                 "opt": {"mu": spec_groups, "nu": spec_groups},
+                 "step": P()}
+
+        def mk(k):
+            p_local = _slice_to_local(model.init(k), pspecs)
+            groups = plan.shard_state(p_local)
+            zeros = lambda: jax.tree.map(
+                lambda s: jnp.zeros_like(s, jnp.float32), groups)
+            return {"groups": groups, "opt": {"mu": zeros(), "nu": zeros()},
+                    "step": jnp.zeros((), jnp.int32)}
+
+    else:
+        raise ValueError(f"dp_mode must be one of {DP_MODES}")
+
+    def mk_from_data(kd):
+        return mk(jax.random.wrap_key_data(kd))
+
+    fn = jax.shard_map(mk_from_data, mesh=mesh, in_specs=P(),
+                       out_specs=specs, check_vma=False)
+    if abstract:
+        kd_abs = jax.eval_shape(jax.random.key_data, jax.random.key(0))
+        return jax.eval_shape(fn, kd_abs), specs
+    return jax.jit(fn)(jax.random.key_data(key)), specs
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
+                     batch_pspecs, donate: bool = True):
+    """Returns ``step(state, batch) -> (state, metrics)`` jitted over the
+    fully-manual mesh."""
+    pspecs = model.param_specs(mesh)
+    ctx = make_ctx(mesh)
+    schedule = make_schedule(cfg.optim.schedule, base_lr=cfg.optim.base_lr,
+                             warmup=cfg.optim.warmup,
+                             total=cfg.optim.total_steps)
+    _, state_specs = init_train_state(model, mesh, cfg, abstract=True)
+    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+
+    if cfg.dp_mode in ("replicated", "zero1"):
+        reducer = build_reducer(model, mesh, cfg)
+        zero1_norm_weights = None
+        if cfg.dp_mode == "zero1":
+            local_abs = _local_shapes(model.abstract_params(), pspecs, mesh)
+            z1_plan = reducer.bucketer.plan(local_abs)
+            specs_flat = jax.tree_util.tree_flatten(
+                pspecs, is_leaf=lambda x: isinstance(x, P))[0]
+            zero1_norm_weights = build_norm_weights(
+                z1_plan, specs_flat, _sizes(mesh).get("model", 1))
+
+        def step_fn(state, batch):
+            def gfn(p, mb):
+                loss = model.loss_fn(p, mb, ctx=ctx,
+                                     causal_skip=cfg.causal_skip)
+                return loss, None
+
+            def grad_fn(p, mb):
+                (loss, _), g = jax.value_and_grad(gfn, has_aux=True)(p, mb)
+                return loss, g
+
+            if cfg.dp_mode == "replicated":
+                loss, grads = accumulate_and_reduce(
+                    grad_fn, lambda g: reducer.reduce_manual(g)[0],
+                    state["params"], batch, cfg.accum)
+                gnorm = global_grad_norm(grads, pspecs, ctx)
+                factor = clip_factor(gnorm, cfg.optim.clip_norm)
+                grads = jax.tree.map(lambda g: g * factor, grads)
+                lr = schedule(state["step"])
+                new_p, new_opt = adamw_tree_update(
+                    state["params"], grads, state["opt"], state["step"], lr,
+                    cfg.optim)
+                new_state = {"params": new_p, "opt": new_opt,
+                             "step": state["step"] + 1}
+            else:  # zero1
+                loss, grads = accumulate_and_reduce(
+                    grad_fn, lambda g: g, state["params"], batch, cfg.accum)
+                shards, plan = reducer.reduce_scatter_manual(grads)
+                # exact global norm over the *reduced* gradient: weight
+                # model-replicated fields by 1/model_size before the psum
+                ordered = reducer._ordered_axes()
+                sq = jnp.zeros((), jnp.float32)
+                for s, w in zip(shards, zero1_norm_weights):
+                    wl = _slice_like_shard(jnp.asarray(w), ordered)
+                    sq = sq + jnp.sum(jnp.square(s) * wl)
+                gnorm = jnp.sqrt(ctx.psum(ctx.psum_data(sq)))
+                factor = clip_factor(gnorm, cfg.optim.clip_norm)
+                shards = [s * factor for s in shards]
+                lr = schedule(state["step"])
+                deltas, new_opt = adamw_flat_update(shards, state["opt"],
+                                                    state["step"], lr,
+                                                    cfg.optim)
+                delta_tree = reducer.all_gather_manual(deltas, plan)
+                wd = 1 - lr * cfg.optim.weight_decay
+                new_p = jax.tree.map(
+                    lambda p, d: (p.astype(jnp.float32) * wd
+                                  + d.astype(jnp.float32)).astype(p.dtype),
+                    state["params"], delta_tree)
+                new_state = {"params": new_p, "opt": new_opt,
+                             "step": state["step"] + 1}
+            metrics = {"loss": ctx.pmean_data(loss), "grad_norm": gnorm,
+                       "lr": lr}
+            return new_state, metrics
+
+    else:  # fsdp / ZeRO-3
+        plan = FsdpPlan(model, mesh, cfg)
+        gdt = jnp.dtype(cfg.gather_dtype)
+
+        def step_fn(state, batch):
+            def gfn(groups, mb):
+                params, resolver = plan.params_and_resolver(groups, gdt)
+                loss = model.loss_fn(params, mb, ctx=ctx,
+                                     causal_skip=cfg.causal_skip,
+                                     block_resolver=resolver)
+                return loss
+
+            def grad_fn(groups, mb):
+                return jax.value_and_grad(gfn)(groups, mb)
+
+            loss, grads = accumulate_and_reduce(
+                grad_fn, lambda g: g, state["groups"], batch, cfg.accum)
+            # grads are flat shards already (AG-transpose == RS-sum over the
+            # data axes); normalise the sum into a mean.
+            inv = 1.0 / max(plan.dp_world, 1)
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            ordered = tuple(reversed(plan.data_axes))
+            sq = jnp.zeros((), jnp.float32)
+            for name in sorted(plan.groups):
+                for g, w in zip(grads[name], plan.norm_weights[name]):
+                    wl = _slice_like_shard(jnp.asarray(w), ordered)
+                    sq = sq + jnp.sum(jnp.square(g.astype(jnp.float32)) * wl)
+            gnorm = jnp.sqrt(ctx.psum(ctx.psum_data(sq)))
+            factor = clip_factor(gnorm, cfg.optim.clip_norm)
+            lr = schedule(state["step"])
+            wd = 1 - lr * cfg.optim.weight_decay
+            new_groups, new_mu, new_nu = {}, {}, {}
+            for name in state["groups"]:
+                gsh = [g * factor for g in grads[name]]
+                deltas, nopt = adamw_flat_update(
+                    gsh, {"mu": state["opt"]["mu"][name],
+                          "nu": state["opt"]["nu"][name]},
+                    state["step"], lr, cfg.optim)
+                new_groups[name] = [
+                    (p.astype(jnp.float32) * wd + d).astype(p.dtype)
+                    for p, d in zip(state["groups"][name], deltas)]
+                new_mu[name] = nopt["mu"]
+                new_nu[name] = nopt["nu"]
+            new_state = {"groups": new_groups,
+                         "opt": {"mu": new_mu, "nu": new_nu},
+                         "step": state["step"] + 1}
+            metrics = {"loss": ctx.pmean_data(loss), "grad_norm": gnorm,
+                       "lr": lr}
+            return new_state, metrics
+
+    sharded = jax.shard_map(step_fn, mesh=mesh,
+                            in_specs=(state_specs, batch_pspecs),
+                            out_specs=(state_specs, metric_specs),
+                            check_vma=False)
+    return jax.jit(sharded, donate_argnums=(0,) if donate else ())

@@ -1,0 +1,4 @@
+from repro.sharding.rules import (batch_spec, decode_state_specs, param_specs,
+                                  shardings_of)
+
+__all__ = ["batch_spec", "decode_state_specs", "param_specs", "shardings_of"]

@@ -1,0 +1,188 @@
+"""Logical-axis sharding rules: param pytrees -> PartitionSpec trees.
+
+Policies:
+* ``tp``   — tensor parallelism over "model" only; params replicated over
+  the data axes (small archs).
+* ``fsdp`` — additionally shard the non-model dim of every large matrix over
+  "data" (ZeRO-3-style; XLA all-gathers per layer on use).  Required for the
+  >=14B archs to fit 16 GB/chip (proven by ``memory_analysis`` in the
+  dry-run).
+
+Rules are name-based over the param dict paths emitted by ``repro.models``.
+Dims shard only when they divide the mesh axis — otherwise they stay
+replicated (kv-head replication for GQA archs whose kv count doesn't tile
+the model axis; query heads are already padded by the model).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+MODEL_AXIS = "model"
+DATA_AXIS = "data"
+POD_AXIS = "pod"
+
+
+def _axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def batch_spec(global_batch: int, mesh: Mesh) -> P:
+    """Shard the batch over ("pod","data") when divisible, else fewer axes."""
+    sizes = _axis_sizes(mesh)
+    axes = [a for a in (POD_AXIS, DATA_AXIS) if a in sizes]
+    prod = 1
+    for a in axes:
+        prod *= sizes[a]
+    if axes and _div(global_batch, prod):
+        return P(tuple(axes))
+    if DATA_AXIS in sizes and _div(global_batch, sizes[DATA_AXIS]):
+        return P(DATA_AXIS)
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+
+def _rule(path: tuple[str, ...], shape: tuple[int, ...], cfg: ModelConfig,
+          sizes: dict[str, int]) -> P:
+    fsdp = DATA_AXIS if (cfg.sharding == "fsdp" and DATA_AXIS in sizes) else None
+    tp = MODEL_AXIS if MODEL_AXIS in sizes else None
+    m = sizes.get(MODEL_AXIS, 1)
+    d = sizes.get(DATA_AXIS, 1)
+    name = path[-1] if path else ""
+    joined = "/".join(path)
+
+    def ok(dim_size, axis):
+        size = sizes.get(axis or "", 1)
+        return axis is not None and _div(dim_size, size)
+
+    # kv projections are NEVER model-sharded: no assigned arch has kv heads
+    # divisible by the 16-wide model axis; each TP rank keeps full kv and
+    # gathers the heads its local q heads group to (attention._gather_kv...).
+    is_kv = any(k in joined for k in ("wk/", "wv/")) or name in ("wk", "wv")
+
+    # 1-d params: shard vectors that live on a TP-sharded feature dim
+    if len(shape) <= 1:
+        if not shape:
+            return P()
+        sharded_vec = (name in ("conv_b", "d_skip") or
+                       ("dt_proj" in joined and name == "b") or
+                       ("wq" in joined and name == "b"))
+        if sharded_vec and not is_kv and ok(shape[0], tp):
+            return P(tp)
+        return P()
+
+    if "embed" in joined and name == "table":            # (V, d)
+        v_ax = tp if ok(shape[0], tp) else None
+        d_ax = fsdp if ok(shape[1], fsdp) else None
+        return P(v_ax, d_ax)
+
+    if name in ("conv_w",):                              # (W, Din)
+        return P(None, tp if ok(shape[1], tp) else None)
+    if name == "a_log":                                  # (Din, N)
+        return P(tp if ok(shape[0], tp) else None, None)
+
+    # MoE expert stacks: (E, d, f) / (E, f, d)
+    if "moe" in joined and name in ("w_gate", "w_up", "w_down") and len(shape) == 3:
+        ep = cfg.moe is not None and cfg.moe.parallelism == "ep"
+        if ep and ok(shape[0], tp):
+            return P(tp, fsdp if ok(shape[1], fsdp) else None, None)
+        # tp-in-expert: shard the ffn dim
+        ff_dim = 2 if name in ("w_gate", "w_up") else 1
+        spec = [None, None, None]
+        if ok(shape[ff_dim], tp):
+            spec[ff_dim] = tp
+        other = 2 if ff_dim == 1 else 1
+        if ok(shape[other], fsdp):
+            spec[other] = fsdp
+        return P(*spec)
+
+    if len(shape) == 2:
+        din, dout = shape
+        if is_kv or "router" in joined:
+            return P(fsdp if ok(din, fsdp) else None, None)
+        row_parallel = any(k in joined for k in ("wo", "w_down", "out_proj",
+                                                 "x_proj"))
+        col_parallel = any(k in joined for k in ("wq", "w_gate", "w_up",
+                                                 "in_proj", "dt_proj",
+                                                 "lm_head"))
+        if row_parallel:
+            return P(tp if ok(din, tp) else None, fsdp if ok(dout, fsdp) else None)
+        if col_parallel:
+            return P(fsdp if ok(din, fsdp) else None, tp if ok(dout, tp) else None)
+        return P(fsdp if ok(din, fsdp) else None, None)
+
+    return P()
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec tree congruent with ``params`` (arrays or SDS)."""
+    sizes = _axis_sizes(mesh)
+
+    def visit(path, leaf):
+        keys = tuple(_key_name(k) for k in path)
+        return _rule(keys, tuple(leaf.shape), cfg, sizes)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def _key_name(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    return str(entry)
+
+
+def shardings_of(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# decode state rules
+# ---------------------------------------------------------------------------
+
+
+def decode_state_specs(state: Any, cfg: ModelConfig, mesh: Mesh,
+                       global_batch: int):
+    """KV caches (B,Hkv,C,D), SSM h (B,Din,N), conv (B,W-1,Din), cross k/v."""
+    sizes = _axis_sizes(mesh)
+    bspec = batch_spec(global_batch, mesh)
+    batch_axes = bspec[0] if len(bspec) else None
+    tp = MODEL_AXIS if MODEL_AXIS in sizes else None
+
+    def visit(path, leaf):
+        keys = tuple(_key_name(k) for k in path)
+        name = keys[-1] if keys else ""
+        shape = tuple(leaf.shape)
+        if name in ("k", "v", "cross_k", "cross_v") and len(shape) == 4:
+            # kv heads replicate across TP ranks (see rules above); long
+            # caches are *sequence-sharded* over the model axis instead
+            # (context-parallel decode) so 32k x big-batch caches fit.
+            seq_ax = (tp if name in ("k", "v") and tp is not None
+                      and shape[2] >= 8192 and _div(shape[2], sizes[tp])
+                      else None)
+            return P(batch_axes, None, seq_ax, None)
+        if name == "h" and len(shape) == 3:
+            h_ax = tp if _div(shape[1], sizes.get(tp or "", 1)) else None
+            return P(batch_axes, h_ax, None)
+        if name == "conv" and len(shape) == 3:
+            h_ax = tp if _div(shape[2], sizes.get(tp or "", 1)) else None
+            return P(batch_axes, None, h_ax)
+        return P(batch_axes) if shape and shape[0] == global_batch else P()
+
+    return jax.tree_util.tree_map_with_path(visit, state)

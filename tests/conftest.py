@@ -1,0 +1,37 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — unit/smoke tests must see the
+real single CPU device (the 512-device override is exclusively the dry-run's;
+distributed tests spawn subprocesses that set their own flag)."""
+
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+
+    return np.random.RandomState(0)
+
+
+def run_distributed(script: str, n_devices: int = 8, timeout: int = 560) -> str:
+    """Run ``script`` in a fresh interpreter with N host devices; returns
+    stdout.  Raises on non-zero exit."""
+    import subprocess
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"distributed script failed (rc={proc.returncode}):\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout

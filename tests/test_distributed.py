@@ -1,0 +1,216 @@
+"""Distributed correctness on 8 fake host devices (fresh subprocesses so the
+main pytest process keeps its single real device)."""
+
+import pytest
+
+from conftest import run_distributed
+
+RING_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, AxisType
+from repro.core import ring
+from repro.core.ring import RingConfig
+
+mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(AxisType.Auto,)*2)
+L = 2*4*2*4*512*2
+x = np.random.RandomState(0).randn(8, L).astype(np.float32)
+want = x.sum(0)
+
+def run(fn, cfg, axes):
+    g = jax.jit(jax.shard_map(lambda xl: fn(xl.reshape(-1), axes, cfg),
+        mesh=mesh, in_specs=P(("pod","data")), out_specs=P(), check_vma=False))
+    return np.asarray(g(x.reshape(-1)))
+
+for cfg in [RingConfig(chunks=1, bidirectional=False),
+            RingConfig(chunks=2, bidirectional=True),
+            RingConfig(chunks=4, bidirectional=True)]:
+    out = run(ring.hierarchical_all_reduce, cfg, ("data","pod"))
+    assert np.abs(out - want).max() < 1e-4, cfg
+    out = run(ring.flat_all_reduce, cfg, ("data","pod"))
+    assert np.abs(out - want).max() < 1e-4, cfg
+
+# lossy wire configs: bounded relative error
+for cfg, tol in [(RingConfig(chunks=2, bidirectional=True, wire_dtype="bfloat16"), 0.03),
+                 (RingConfig(chunks=2, bidirectional=True, codec="int8", codec_block=256), 0.05)]:
+    out = run(ring.hierarchical_all_reduce, cfg, ("data","pod"))
+    rel = np.abs(out - want).max() / np.abs(want).max()
+    assert rel < tol, (cfg, rel)
+
+# RS/AG roundtrip == AR
+cfg = RingConfig(chunks=2, bidirectional=True)
+def rsag(xl):
+    s = ring.ring_reduce_scatter(xl.reshape(-1), "data", cfg)
+    return ring.ring_all_gather(s, "data", cfg)
+g = jax.jit(jax.shard_map(rsag, mesh=mesh, in_specs=P(("pod","data")),
+    out_specs=P(("pod","data")), check_vma=False))
+out = np.asarray(g(x.reshape(-1))).reshape(2, 4, L)
+per_pod = x.reshape(2,4,L).sum(1)
+for p in range(2):
+    for d in range(4):
+        assert np.abs(out[p,d] - per_pod[p]).max() < 1e-4
+print("RING_OK")
+"""
+
+REDUCER_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from repro.core.reducer import GradientReducer, ReduceConfig
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(AxisType.Auto,)*3)
+rng = np.random.RandomState(1)
+grads = {"w": jnp.asarray(rng.randn(16, 256).astype(np.float32)),
+         "b": jnp.asarray(rng.randn(256).astype(np.float32)),
+         "emb": jnp.asarray(rng.randn(1000, 64).astype(np.float32))}
+specs = {"w": P(None, "model"), "b": P(), "emb": P("model", None)}
+sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                  is_leaf=lambda x: isinstance(x, P))
+grads = jax.tree.map(lambda g, s: jax.device_put(g, s), grads, sh)
+
+for policy in ["fused_ring_hierarchical", "fused_ring", "native_psum",
+               "native_psum_fused", "baidu_original"]:
+    red = GradientReducer(mesh, ReduceConfig(policy=policy, data_axes=("pod","data"), chunks=2))
+    def mk(x):
+        i = jax.lax.axis_index("pod")*2 + jax.lax.axis_index("data")
+        return jax.tree.map(lambda t: t*(1.0+i), x)
+    gv = jax.jit(jax.shard_map(mk, mesh=mesh, in_specs=(specs,), out_specs=specs,
+                               check_vma=False))(grads)
+    out = jax.jit(lambda g: red.reduce(g, specs)[0])(gv)
+    scale = np.mean([1.0+i for i in range(4)])
+    for k in grads:
+        err = float(jnp.max(jnp.abs(out[k] - grads[k]*scale)))
+        assert err < 1e-4, (policy, k, err)
+print("REDUCER_OK")
+"""
+
+HALO_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, AxisType
+from repro.core.halo import HaloSpec, halo_exchange
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+Y = jnp.arange(64, dtype=jnp.float32).reshape(64, 1)
+for sched in ["concurrent", "sequential", "chunked"]:
+    def hx(xl, s=sched):
+        h = halo_exchange(xl, [HaloSpec("data", 0)], schedule=s, chunks=1)
+        return jnp.concatenate([h[("data","-")], xl, h[("data","+")]], 0)
+    g = jax.jit(jax.shard_map(hx, mesh=mesh, in_specs=P("data"),
+                              out_specs=P("data"), check_vma=False))
+    out = np.asarray(g(Y)).reshape(8, 10)
+    ys = np.asarray(Y).reshape(8, 8)
+    for r in range(8):
+        exp = np.concatenate([[ys[(r-1)%8,-1]], ys[r], [ys[(r+1)%8,0]]])
+        assert np.array_equal(out[r], exp), (sched, r)
+print("HALO_OK")
+"""
+
+DPMODES_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, AxisType
+from repro.configs import reduced_config
+from repro.models import build_model
+from repro.runtime.train_step import TrainStepConfig, build_train_step, init_train_state
+from repro.core.reducer import ReduceConfig
+from repro.core.overlap import AccumConfig
+from repro.optim import adamw_tree_update, init_opt_state, OptimConfig, make_schedule
+from repro.optim.adamw import clip_factor
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(AxisType.Auto,)*3)
+cfg = reduced_config("llama3.2-1b")
+m = build_model(cfg)
+B, S = 8, 32
+rng = np.random.RandomState(0)
+batch = {"tokens": jnp.asarray(rng.randint(0, 500, (B, S)), jnp.int32),
+         "labels": jnp.asarray(rng.randint(0, 500, (B, S)), jnp.int32)}
+bspecs = {"tokens": P(("pod","data"), None), "labels": P(("pod","data"), None)}
+
+ocfg = OptimConfig()
+params = m.init(jax.random.key(7))
+opt = init_opt_state(params)
+sched = make_schedule(ocfg.schedule, base_lr=ocfg.base_lr, warmup=ocfg.warmup,
+                      total=ocfg.total_steps)
+@jax.jit
+def ref_step(params, opt, step):
+    loss, g = jax.value_and_grad(lambda p: m.loss_fn(p, batch))(params)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(g)))
+    g = jax.tree.map(lambda x: x * clip_factor(gn, ocfg.clip_norm), g)
+    p2, opt2 = adamw_tree_update(params, g, opt, step, sched(step), ocfg)
+    return p2, opt2, loss
+ref = []
+st = jnp.zeros((), jnp.int32)
+for i in range(3):
+    params, opt, loss = ref_step(params, opt, st); st = st + 1
+    ref.append(float(loss))
+
+for mode, tol in [("replicated", 5e-5), ("zero1", 5e-5), ("fsdp", 5e-4)]:
+    tcfg = TrainStepConfig(dp_mode=mode,
+                           reduce=ReduceConfig(policy="fused_ring_hierarchical", chunks=2),
+                           accum=AccumConfig(microbatches=2))
+    with mesh:
+        state, _ = init_train_state(m, mesh, tcfg, key=jax.random.key(7))
+        step = build_train_step(m, mesh, tcfg, bspecs)
+        losses = []
+        for i in range(3):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+    err = max(abs(a-b) for a, b in zip(ref, losses))
+    assert err < tol, (mode, ref, losses)
+    print(mode, "OK", err)
+print("DPMODES_OK")
+"""
+
+SERVE_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from repro.configs import reduced_config, base
+from repro.models import build_model
+from repro.runtime.serve_step import build_decode_step, build_prefill
+from repro.sharding import shardings_of
+
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+cfg = reduced_config("llama3.2-1b")
+m = build_model(cfg)
+params = m.init(jax.random.key(0))
+B, S = 8, 16384  # long cache -> seq-sharded kv path
+shape = base.ShapeConfig("t", S, B, "decode")
+step, pspecs, sspecs = build_decode_step(m, mesh, shape)
+with mesh:
+    psh = shardings_of(pspecs, mesh)
+    params_d = jax.jit(lambda p: p, out_shardings=psh)(params)
+    state = jax.jit(lambda: m.abstract_decode_state(B, S) and None)  # noqa
+    import repro.models.transformer as T
+    state = T.init_decode_state(m.cfg, B, S)
+    state = jax.jit(lambda s: s, out_shardings=shardings_of(sspecs, mesh))(state)
+    # single-device reference via plain decode
+    tok = jnp.arange(B, dtype=jnp.int32) % 100
+    ref_state = T.init_decode_state(m.cfg, B, S)
+    logits_ref, _ = m.decode_step(params, tok, ref_state, jnp.asarray(0), seq_len=S)
+    logits, state = step(params_d, tok, state, jnp.asarray(0))
+    err = float(jnp.max(jnp.abs(logits.astype(jnp.float32) - logits_ref.astype(jnp.float32))))
+    assert err < 2e-2, err
+print("SERVE_OK", err)
+"""
+
+
+@pytest.mark.slow
+def test_ring_collectives_distributed():
+    assert "RING_OK" in run_distributed(RING_SCRIPT)
+
+
+@pytest.mark.slow
+def test_reducer_policies_distributed():
+    assert "REDUCER_OK" in run_distributed(REDUCER_SCRIPT)
+
+
+@pytest.mark.slow
+def test_halo_exchange_distributed():
+    assert "HALO_OK" in run_distributed(HALO_SCRIPT)
+
+
+@pytest.mark.slow
+def test_dp_modes_match_single_device():
+    assert "DPMODES_OK" in run_distributed(DPMODES_SCRIPT)
+
+
+@pytest.mark.slow
+def test_serve_decode_seq_sharded_kv():
+    assert "SERVE_OK" in run_distributed(SERVE_SCRIPT)

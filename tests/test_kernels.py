@@ -1,0 +1,78 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import ops as fa_ops
+from repro.kernels.flash_attn import ref as fa_ref
+from repro.kernels.quant import ops as q_ops
+from repro.kernels.quant import ref as q_ref
+from repro.kernels.reduce_add import ops as ra_ops
+from repro.kernels.reduce_add import ref as ra_ref
+
+
+@pytest.mark.parametrize("n", [8 * 128, 64 * 128, 8 * 128 * 7])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_reduce_add_matches_ref(n, dtype, rng):
+    a = jnp.asarray(rng.randn(n), dtype)
+    b = jnp.asarray(rng.randn(n), dtype)
+    out = ra_ops.add_accum(a, b, interpret=True)
+    want = ra_ref.add_accum(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=0, atol=0)
+    assert out.dtype == jnp.float32
+
+
+def test_reduce_add_odd_shape_falls_back(rng):
+    a = jnp.asarray(rng.randn(100), jnp.float32)   # not lane-aligned
+    out = ra_ops.add_accum(a, a)
+    np.testing.assert_allclose(np.asarray(out), 2 * np.asarray(a), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,block", [(4096, 512), (2048, 128), (8192, 1024),
+                                     (512, 256)])
+def test_quant_matches_ref(n, block, rng):
+    x = jnp.asarray(rng.randn(n).astype(np.float32) * 3.0)
+    q, s = q_ops.quantize(x, block, interpret=True)
+    q2, s2 = q_ref.quantize_blocks(np.asarray(x).reshape(-1, block))
+    np.testing.assert_array_equal(np.asarray(q).reshape(-1, block), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s2).reshape(-1), rtol=1e-7)
+    back = q_ops.dequantize(q, s, block, interpret=True)
+    # absmax block quantisation error bound: scale/2 per element
+    bound = np.repeat(np.asarray(s), block) * 0.5 + 1e-8
+    assert np.all(np.abs(np.asarray(back) - np.asarray(x)) <= bound)
+
+
+def test_quant_zero_block_safe():
+    x = jnp.zeros((1024,), jnp.float32)
+    q, s = q_ops.quantize(x, 256, interpret=True)
+    assert np.all(np.asarray(q) == 0)
+    back = q_ops.dequantize(q, s, 256, interpret=True)
+    assert np.all(np.asarray(back) == 0)
+
+
+@pytest.mark.parametrize("sq,sk,hq,hkv,d", [
+    (256, 256, 4, 2, 64), (128, 128, 2, 2, 32), (256, 256, 8, 1, 64),
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_attention_matches_ref(sq, sk, hq, hkv, d, causal, window, rng):
+    q = jnp.asarray(rng.randn(2, hq, sq, d).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.randn(2, hkv, sk, d).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.randn(2, hkv, sk, d).astype(np.float32))
+    out = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                 block_q=128, block_k=128, interpret=True)
+    want = fa_ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16(rng):
+    q = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+    k = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+    v = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+    out = fa_ops.flash_attention(q, k, v, interpret=True)
+    want = fa_ref.attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)

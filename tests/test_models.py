@@ -1,0 +1,142 @@
+"""Model-layer unit tests: attention paths, SSM, MoE vs dense references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttnConfig, MoEConfig, SSMConfig
+from repro.kernels.flash_attn import ref as fa_ref
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.parallel import SINGLE
+
+
+def test_blockwise_attention_matches_exact(rng):
+    q = jnp.asarray(rng.randn(2, 4, 256, 32).astype(np.float32)) * 0.4
+    k = jnp.asarray(rng.randn(2, 2, 256, 32).astype(np.float32)) * 0.4
+    v = jnp.asarray(rng.randn(2, 2, 256, 32).astype(np.float32))
+    for kw in [dict(causal=True), dict(causal=True, window=96),
+               dict(causal=True, chunk=64), dict(causal=False)]:
+        out = attn_mod.blockwise_attention(q, k, v, block_q=64, block_k=64, **kw)
+        want = fa_ref.attention(q, k, v, causal=kw.get("causal", True),
+                                window=kw.get("window"))
+        if "chunk" in kw:
+            continue  # ref has no chunk mode; covered by skip-equivalence below
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_causal_skip_is_exact(rng):
+    """Static skipping of masked blocks must not change the result."""
+    q = jnp.asarray(rng.randn(1, 2, 256, 32).astype(np.float32))
+    k = jnp.asarray(rng.randn(1, 2, 256, 32).astype(np.float32))
+    v = jnp.asarray(rng.randn(1, 2, 256, 32).astype(np.float32))
+    for kw in [dict(causal=True), dict(causal=True, window=64),
+               dict(causal=True, chunk=64)]:
+        a = attn_mod.blockwise_attention(q, k, v, block_q=64, block_k=64,
+                                         causal_skip=False, **kw)
+        b = attn_mod.blockwise_attention(q, k, v, block_q=64, block_k=64,
+                                         causal_skip=True, **kw)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_attn_decode_matches_forward(window, rng):
+    """Sequential decode with KV cache == full causal forward, step by step."""
+    cfg = AttnConfig(num_heads=4, num_kv_heads=2, head_dim=16, window=window)
+    key = jax.random.key(0)
+    p = attn_mod.attn_init(key, cfg, 64, pad_to=1)
+    S, B = 24, 2
+    x = jnp.asarray(rng.randn(B, S, 64).astype(np.float32)) * 0.3
+    full = attn_mod.attn_apply(p, x, cfg, is_global=False, ctx=SINGLE,
+                               compute_dtype=jnp.float32)
+    cache = attn_mod.init_cache(cfg, B, S, is_global=False, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        y, cache = attn_mod.attn_decode(p, x[:, t:t + 1], cfg, cache,
+                                        is_global=False, ctx=SINGLE,
+                                        pos=jnp.asarray(t),
+                                        compute_dtype=jnp.float32,
+                                        cache_len_global=cache["k"].shape[2])
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_decode_matches_full_scan(rng):
+    cfg = SSMConfig(state_dim=4, conv_width=4, expand=2, dt_rank=8)
+    key = jax.random.key(1)
+    d = 32
+    p = ssm_mod.ssm_init(key, cfg, d)
+    B, S = 2, 16
+    x = jnp.asarray(rng.randn(B, S, d).astype(np.float32)) * 0.3
+    full = ssm_mod.ssm_apply(p, x, cfg, ctx=SINGLE, compute_dtype=jnp.float32,
+                             d_model=d)
+    state = ssm_mod.init_ssm_state(cfg, d, B)
+    outs = []
+    for t in range(S):
+        y, state = ssm_mod.ssm_decode(p, x[:, t:t + 1], cfg, state, ctx=SINGLE,
+                                      compute_dtype=jnp.float32, d_model=d)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_moe_matches_dense_reference(rng):
+    """With generous capacity (no drops), sort-based dispatch == explicit
+    per-token expert evaluation."""
+    cfg = MoEConfig(num_experts=4, top_k=2, expert_ff=32,
+                    capacity_factor=4.0, parallelism="tp")
+    key = jax.random.key(2)
+    d = 16
+    p = moe_mod.moe_init(key, cfg, d)
+    B, S = 2, 32
+    x = jnp.asarray(rng.randn(B, S, d).astype(np.float32)) * 0.5
+    y, aux = moe_mod.moe_apply(p, x, cfg, "silu", ctx=SINGLE,
+                               compute_dtype=jnp.float32)
+
+    # dense reference
+    logits = np.asarray(x) @ np.asarray(p["router"]["w"])
+    probs = jax.nn.softmax(jnp.asarray(logits), axis=-1)
+    top_v, top_i = jax.lax.top_k(jnp.asarray(logits), 2)
+    gates = jax.nn.softmax(top_v, axis=-1)
+    want = np.zeros((B, S, d), np.float32)
+    for b in range(B):
+        for s in range(S):
+            for j in range(2):
+                e = int(top_i[b, s, j])
+                w1 = np.asarray(p["w_gate"][e]); w3 = np.asarray(p["w_up"][e])
+                w2 = np.asarray(p["w_down"][e])
+                h = np.asarray(jax.nn.silu(jnp.asarray(x[b, s] @ w1))) * \
+                    (np.asarray(x[b, s]) @ w3)
+                want[b, s] += float(gates[b, s, j]) * (h @ w2)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=2e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    """Tiny capacity must drop overflow tokens, not crash."""
+    cfg = MoEConfig(num_experts=2, top_k=1, expert_ff=16, capacity_factor=0.1)
+    p = moe_mod.moe_init(jax.random.key(3), cfg, 8)
+    x = jnp.ones((1, 64, 8), jnp.float32)  # all tokens -> same expert
+    y, _ = moe_mod.moe_apply(p, x, cfg, "silu", ctx=SINGLE,
+                             compute_dtype=jnp.float32)
+    assert np.isfinite(np.asarray(y)).all()
+    # most tokens dropped -> most outputs zero
+    nonzero = np.abs(np.asarray(y)).sum(-1) > 1e-6
+    assert nonzero.sum() <= moe_mod.capacity(64, cfg) * cfg.num_experts
+
+
+def test_gqa_head_gather_mapping():
+    cfg = AttnConfig(num_heads=6, num_kv_heads=2, head_dim=8)
+    k = jnp.arange(2 * 2 * 4 * 8, dtype=jnp.float32).reshape(2, 2, 4, 8)
+    v = k + 100
+    kk, vv = attn_mod._gather_kv_for_local_q(k, v, cfg, 8, SINGLE)
+    # true group = 3: q heads 0-2 -> kv0, 3-5 -> kv1, padded 6,7 -> kv1 (clip)
+    expect = [0, 0, 0, 1, 1, 1, 1, 1]
+    for h, e in enumerate(expect):
+        np.testing.assert_array_equal(np.asarray(kk[:, h]), np.asarray(k[:, e]))

