@@ -1,12 +1,13 @@
 """Paper Figures 1/2/5: gradient-reduction time & bandwidth vs vector length,
-original (per-tensor, unidirectional, unfused) vs optimised policies.
+original (per-tensor, unidirectional, unfused) vs optimised transports.
 
 Workload mirrors synchronous-SGD gradient reduction: a pytree of K tensors
 totalling L fp32 elements (K grows with L like a real model's parameter
-list).  ``baidu_original`` reduces tensor-by-tensor over a one-direction
-ring (the published code's behaviour); the optimised policies fuse into
-aligned buckets and run bidirectional chunked / hierarchical / compressed
-rings; ``native_psum`` is the vendor-collective reference.
+list).  The ``original`` row reduces tensor-by-tensor over a one-direction
+ring (the published code's behaviour); the optimised rows fuse into aligned
+buckets and run the registered ``repro.comm`` transports.  On top of the
+transport sweep, the ``ring_hier`` schedule is swept over ``channels`` in
+{1, 2, 4} — the paper's multi-rail endpoint count as a config knob.
 """
 
 from __future__ import annotations
@@ -16,10 +17,11 @@ from benchmarks.common import TIMER_SNIPPET, run_on_devices
 SCRIPT = TIMER_SNIPPET + r"""
 import numpy as np
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, AxisType
-from repro.core.reducer import GradientReducer, ReduceConfig
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.comm import CommConfig, Communicator
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(AxisType.Auto,)*2)
+mesh = compat.make_mesh((2, 4), ("pod", "data"))
 P_WORLD = 8
 
 def workload(total_elems, rng):
@@ -29,35 +31,41 @@ def workload(total_elems, rng):
     return {f"g{i}": jnp.asarray(rng.randn(int(s)).astype(np.float32))
             for i, s in enumerate(sizes)}
 
-POLICIES = [
-    ("baidu_original", dict(policy="baidu_original", bucket_bytes=1)),
-    ("fused_ring", dict(policy="fused_ring", chunks=2, bucket_bytes=32*2**20)),
-    ("fused_ring_hierarchical", dict(policy="fused_ring_hierarchical",
-                                     chunks=2, bucket_bytes=32*2**20)),
-    ("fused_ring_compressed", dict(policy="fused_ring_compressed",
-                                   chunks=2, bucket_bytes=32*2**20)),
-    ("native_psum", dict(policy="native_psum")),
-    ("native_psum_fused", dict(policy="native_psum_fused",
-                               bucket_bytes=32*2**20)),
+CONFIGS = [
+    # (row label, CommConfig kwargs)
+    ("original", dict(transport="ring", chunks=1, bidirectional=False,
+                      bucket_bytes=1)),
+    ("ring", dict(transport="ring", chunks=2, bucket_bytes=32*2**20)),
+    ("ring_hier/ch1", dict(transport="ring_hier", chunks=2, channels=1,
+                           bucket_bytes=32*2**20)),
+    ("ring_hier/ch2", dict(transport="ring_hier", chunks=2, channels=2,
+                           bucket_bytes=32*2**20)),
+    ("ring_hier/ch4", dict(transport="ring_hier", chunks=2, channels=4,
+                           bucket_bytes=32*2**20)),
+    ("ring_compressed", dict(transport="ring_compressed", chunks=2,
+                             bucket_bytes=32*2**20)),
+    ("psum", dict(transport="psum", fuse=False)),
+    ("psum_fused", dict(transport="psum", bucket_bytes=32*2**20)),
 ]
 
 rng = np.random.RandomState(0)
-print("policy,elements,us_per_call,alg_bw_mb_s,pct_vs_original")
+print("transport,channels,elements,us_per_call,alg_bw_mb_s,pct_vs_original")
 base = {}
 for total in [1<<12, 1<<16, 1<<20, 1<<22]:
     tree = workload(total, rng)
     specs = {k: P() for k in tree}
-    for name, kw in POLICIES:
-        red = GradientReducer(mesh, ReduceConfig(data_axes=("pod","data"), **kw))
-        fn = jax.jit(lambda g: red.reduce(g, specs)[0])
+    for name, kw in CONFIGS:
+        comm = Communicator(mesh, CommConfig(data_axes=("pod","data"), **kw))
+        fn = jax.jit(lambda g: comm.reduce(g, specs)[0])
         sec = time_call(fn, tree)
         # ring algorithm bytes: 2 (p-1)/p * payload, both directions counted once
         alg_bytes = 2 * (P_WORLD - 1) / P_WORLD * total * 4
         bw = alg_bytes / sec / 1e6
-        if name == "baidu_original":
+        if name == "original":
             base[total] = sec
         pct = 100.0 * base[total] / sec
-        print(f"{name},{total},{sec*1e6:.1f},{bw:.1f},{pct:.0f}")
+        ch = kw.get("channels", 0)
+        print(f"{name},{ch},{total},{sec*1e6:.1f},{bw:.1f},{pct:.0f}")
 """
 
 

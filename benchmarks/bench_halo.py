@@ -8,12 +8,15 @@ from benchmarks.common import TIMER_SNIPPET, run_on_devices
 SCRIPT = TIMER_SNIPPET + r"""
 import numpy as np
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, AxisType
-from repro.core.halo import HaloSpec, halo_exchange, halo_bytes
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.comm import CommConfig, Communicator
+from repro.core.halo import HaloSpec, halo_bytes
 
 # 3-D Cartesian communicator on 8 ranks (2x2x2), like the paper's 2^4 grid
-mesh = jax.make_mesh((2, 2, 2), ("x", "y", "z"), axis_types=(AxisType.Auto,)*3)
+mesh = compat.make_mesh((2, 2, 2), ("x", "y", "z"))
 SPECS = [HaloSpec("x", 0), HaloSpec("y", 1), HaloSpec("z", 2)]
+comm = Communicator(mesh, CommConfig(data_axes=("x", "y", "z"), channels=4))
 
 print("schedule,local_vol,bytes_per_rank,us_per_exchange,mb_s")
 for L in [8, 16, 24]:
@@ -23,11 +26,11 @@ for L in [8, 16, 24]:
     nbytes = halo_bytes((L, L, L, 16), SPECS, 4)
     for sched in ["sequential", "concurrent", "chunked"]:
         def fn(xl, s=sched):
-            h = halo_exchange(xl, SPECS, schedule=s, chunks=4)
+            h = comm.halo_exchange(xl, SPECS, schedule=s)
             # consume all faces so nothing is dead-code eliminated
             return sum(v.sum() for v in h.values())
-        g = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=spec_in,
-                                  out_specs=P(), check_vma=False))
+        g = jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=spec_in,
+                                     out_specs=P(), check_vma=False))
         sec = time_call(g, x)
         print(f"{sched},{L}^3,{nbytes},{sec*1e6:.1f},{nbytes/sec/1e6:.1f}")
 """

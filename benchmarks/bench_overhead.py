@@ -12,12 +12,13 @@ from benchmarks.common import TIMER_SNIPPET, run_on_devices
 SCRIPT = TIMER_SNIPPET + r"""
 import numpy as np
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.comm import CommConfig, Communicator
 from repro.core import ring
 from repro.core.ring import RingConfig
-from repro.core.reducer import GradientReducer, ReduceConfig
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(AxisType.Auto,)*2)
+mesh = compat.make_mesh((2, 4), ("pod", "data"))
 rng = np.random.RandomState(0)
 
 def workload(total, k=32):
@@ -36,16 +37,17 @@ for total in [1<<14, 1<<20]:
     pad = cfg.flat_divisor([4, 2])
     L = (total + pad - 1) // pad * pad
     flat = jnp.zeros((L,), jnp.float32)
-    comm = jax.jit(jax.shard_map(
+    comm_only = jax.jit(compat.shard_map(
         lambda x: ring.hierarchical_all_reduce(x, ("data", "pod"), cfg),
         mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False))
-    t_comm = time_call(comm, flat)
+    t_comm = time_call(comm_only, flat)
 
-    for name, kw in [("original", dict(policy="baidu_original", bucket_bytes=1)),
-                     ("optimised", dict(policy="fused_ring_hierarchical",
+    for name, kw in [("original", dict(transport="ring", chunks=1,
+                                       bidirectional=False, bucket_bytes=1)),
+                     ("optimised", dict(transport="ring_hier",
                                         chunks=2, bucket_bytes=32*2**20))]:
-        red = GradientReducer(mesh, ReduceConfig(data_axes=("pod","data"), **kw))
-        fn = jax.jit(lambda g: red.reduce(g, specs)[0])
+        comm = Communicator(mesh, CommConfig(data_axes=("pod","data"), **kw))
+        fn = jax.jit(lambda g: comm.reduce(g, specs)[0])
         t_total = time_call(fn, tree)
         pct = 100.0 * min(t_comm / t_total, 1.0)
         print(f"{name},{total},{t_total*1e6:.1f},{t_comm*1e6:.1f},{pct:.0f}")

@@ -10,9 +10,10 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.core.reducer import GradientReducer, ReduceConfig
+from repro import compat
+from repro.comm import CommConfig, Communicator
 
 
 def main() -> None:
@@ -27,7 +28,7 @@ def main() -> None:
               "so this measures pure bucketing overhead.  Run with\n"
               "  XLA_FLAGS=--xla_force_host_platform_device_count=8\n"
               "to see the paper's before/after (as benchmarks/run.py does).")
-    mesh = jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = compat.make_mesh((n,), ("data",))
     rng = np.random.RandomState(0)
     k = args.tensors
     sizes = np.full(k, args.elements // k)
@@ -38,14 +39,17 @@ def main() -> None:
 
     results = {}
     for name, kw in [
-        ("baidu_original   (per-tensor, uni-ring)",
-         dict(policy="baidu_original", bucket_bytes=1)),
-        ("fused_ring       (buckets + bi + chunks)",
-         dict(policy="fused_ring", chunks=2, bucket_bytes=32 * 2**20)),
-        ("native_psum      (vendor reference)", dict(policy="native_psum")),
+        ("original         (per-tensor, uni-ring)",
+         dict(transport="ring", chunks=1, bidirectional=False, bucket_bytes=1)),
+        ("ring             (buckets + bi + chunks)",
+         dict(transport="ring", chunks=2, bucket_bytes=32 * 2**20)),
+        ("ring x2 rails    (channel striping)",
+         dict(transport="ring", chunks=2, channels=2, bucket_bytes=32 * 2**20)),
+        ("psum             (vendor reference)",
+         dict(transport="psum", fuse=False)),
     ]:
-        red = GradientReducer(mesh, ReduceConfig(data_axes=("data",), **kw))
-        fn = jax.jit(lambda g: red.reduce(g, specs)[0])
+        comm = Communicator(mesh, CommConfig(data_axes=("data",), **kw))
+        fn = jax.jit(lambda g: comm.reduce(g, specs)[0])
         jax.block_until_ready(fn(tree))
         t0 = time.time()
         for _ in range(5):
@@ -55,7 +59,8 @@ def main() -> None:
         print(f"{name}: {dt*1e6:10.1f} us/reduction")
     base = results[list(results)[0]]
     for name, dt in list(results.items())[1:]:
-        print(f"speedup vs original — {name.split()[0]}: {base/dt:.1f}x")
+        label = name.split("(")[0].strip()
+        print(f"speedup vs original — {label}: {base/dt:.1f}x")
 
 
 if __name__ == "__main__":

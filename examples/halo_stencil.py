@@ -8,20 +8,23 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.core.halo import HaloSpec, halo_exchange, halo_bytes
+from repro import compat
+from repro.comm import CommConfig, Communicator
+from repro.core.halo import HaloSpec, halo_bytes
 
 
 def main() -> None:
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("x",), axis_types=(AxisType.Auto,))
+    mesh = compat.make_mesh((n,), ("x",))
     L, C = 32, 12
     specs = [HaloSpec("x", 0)]
     x = jnp.ones((n * L, L, C), jnp.float32)
+    comm = Communicator(mesh, CommConfig(data_axes=("x",), channels=2))
 
     def stencil(xl, schedule):
-        h = halo_exchange(xl, specs, schedule=schedule, chunks=2)
+        h = comm.halo_exchange(xl, specs, schedule=schedule)
         up = jnp.concatenate([h[("x", "-")], xl], axis=0)
         dn = jnp.concatenate([xl, h[("x", "+")]], axis=0)
         m = xl.shape[0]
@@ -30,9 +33,9 @@ def main() -> None:
 
     nbytes = halo_bytes((L, L, C), specs, 4)
     for sched in ["sequential", "concurrent", "chunked"]:
-        fn = jax.jit(jax.shard_map(lambda v, s=sched: stencil(v, s), mesh=mesh,
-                                   in_specs=P("x"), out_specs=P("x"),
-                                   check_vma=False))
+        fn = jax.jit(compat.shard_map(lambda v, s=sched: stencil(v, s),
+                                      mesh=mesh, in_specs=P("x"),
+                                      out_specs=P("x"), check_vma=False))
         jax.block_until_ready(fn(x))
         t0 = time.time()
         for _ in range(10):

@@ -6,10 +6,10 @@ optimised gradient reduction, on however many devices this host has.
 
 import jax
 
+from repro.comm import CommConfig
 from repro.configs import reduced_config
 from repro.configs.base import ShapeConfig
 from repro.core.overlap import AccumConfig
-from repro.core.reducer import ReduceConfig
 from repro.data import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
@@ -30,7 +30,7 @@ def main() -> None:
                                       seq_len=128, global_batch=8))
     step_cfg = TrainStepConfig(
         dp_mode="replicated",
-        reduce=ReduceConfig(policy="fused_ring_hierarchical", chunks=2),
+        comm=CommConfig(transport="ring_hier", chunks=2),
         optim=OptimConfig(base_lr=3e-3, warmup=10, total_steps=60),
         accum=AccumConfig(microbatches=1))
     trainer = Trainer(model, mesh, step_cfg, data, shape,

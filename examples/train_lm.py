@@ -2,7 +2,7 @@
 checkpoint/restart, straggler accounting and the paper's reducer.
 
     PYTHONPATH=src python examples/train_lm.py --steps 300 \
-        --policy fused_ring_hierarchical --dp-mode zero1
+        --transport ring_hier --channels 2 --dp-mode zero1
 
 Interrupt it and re-run: it resumes from the last committed checkpoint.
 """
@@ -11,10 +11,10 @@ import argparse
 
 import jax
 
+from repro.comm import CommConfig, list_transports
 from repro.configs import get_config, reduced_config
 from repro.configs.base import ShapeConfig
 from repro.core.overlap import AccumConfig
-from repro.core.reducer import POLICIES, ReduceConfig
 from repro.data import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
@@ -38,8 +38,10 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--seq", type=int, default=512)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--policy", default="fused_ring_hierarchical",
-                    choices=POLICIES)
+    ap.add_argument("--transport", default="ring_hier",
+                    choices=list_transports())
+    ap.add_argument("--channels", type=int, default=0,
+                    help="virtual comm rails (0 = unconstrained)")
     ap.add_argument("--dp-mode", default="zero1", choices=DP_MODES)
     ap.add_argument("--microbatches", type=int, default=2)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
@@ -55,8 +57,8 @@ def main() -> None:
                                       global_batch=args.batch))
     step_cfg = TrainStepConfig(
         dp_mode=args.dp_mode,
-        reduce=ReduceConfig(policy=args.policy, chunks=2,
-                            bucket_bytes=32 * 2**20),
+        comm=CommConfig(transport=args.transport, channels=args.channels,
+                        chunks=2, bucket_bytes=32 * 2**20),
         optim=OptimConfig(base_lr=args.lr, warmup=20, schedule="wsd",
                           total_steps=args.steps),
         accum=AccumConfig(microbatches=args.microbatches, policy="stream"))

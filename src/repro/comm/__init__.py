@@ -1,0 +1,27 @@
+"""repro.comm — unified Communicator API for every collective in the system.
+
+One schedulable substrate for gradient reduction (SGD) and halo exchange
+(QCD), in the spirit of MPI communicators: a :class:`Communicator` built
+from ``(mesh, CommConfig)`` exposes ``all_reduce`` / ``reduce_scatter`` /
+``all_gather`` / ``halo_exchange`` / ``stripe`` over named *transports*
+registered in :mod:`repro.comm.registry`, with channel striping
+(multi-rail concurrency) as a config knob.
+
+Legacy string policies (``ReduceConfig.policy``) map onto transports via
+:data:`POLICY_TO_TRANSPORT`; :class:`repro.core.reducer.GradientReducer`
+remains as a deprecated shim over this package.
+"""
+
+from repro.comm.api import (CommConfig, Communicator, POLICY_TO_TRANSPORT,
+                            comm_config_from_policy)
+from repro.comm.plan import ChannelAssignment, CommPlan, assign_channels
+from repro.comm.registry import (Transport, TransportSpec, get_transport,
+                                 list_transports, register_transport,
+                                 transport_specs)
+
+__all__ = [
+    "ChannelAssignment", "CommConfig", "CommPlan", "Communicator",
+    "POLICY_TO_TRANSPORT", "Transport", "TransportSpec", "assign_channels",
+    "comm_config_from_policy", "get_transport", "list_transports",
+    "register_transport", "transport_specs",
+]

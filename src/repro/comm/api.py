@@ -1,0 +1,323 @@
+"""The Communicator: every collective in the system behind one object.
+
+The paper's central technique is concurrency through multiple independent
+communicators (multi-rail PSM2 endpoints) over guaranteed large buffers.
+:class:`Communicator` makes that a first-class object: constructed once from
+``(mesh, CommConfig)``, it owns
+
+* the **transport** — a registered collective schedule
+  (:mod:`repro.comm.registry`) whose capabilities are checked here, at
+  construction, so an invalid combination never reaches trace time;
+* the **bucketer** — fused, alignment-guaranteed flat buffers
+  (:mod:`repro.core.bucketing`);
+* the **virtual channels** — ``cfg.channels`` independent rails that the
+  bucket list is striped across (:func:`repro.comm.plan.assign_channels`).
+  ``channels == 0`` leaves every bucket an independent collective (the
+  scheduler free-for-all); ``channels == N`` guarantees exactly N rails,
+  each issuing its buckets in FIFO order with no cross-rail dependencies —
+  the multi-rail analogue as a config knob instead of a code path.
+
+Collective methods (``all_reduce`` / ``reduce_scatter`` / ``all_gather`` /
+``halo_exchange``) run *inside* a fully-manual ``shard_map``; ``reduce`` is
+the SPMD convenience wrapper that opens one for you.  ``GradientReducer``
+(:mod:`repro.core.reducer`) survives as a thin deprecated shim over this
+class.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.comm.plan import ChannelAssignment, CommPlan, assign_channels
+from repro.comm.registry import Transport, get_transport
+from repro.core.bucketing import BucketPlan, GradientBucketer
+from repro.core.compression import ErrorFeedback
+from repro.core.halo import HaloSpec, halo_exchange as _halo_exchange
+from repro.core.ring import RingConfig
+from repro.core.topology import order_token, reduce_axes_of
+
+# former ReduceConfig.policy -> (transport, CommConfig field overrides)
+POLICY_TO_TRANSPORT: dict[str, tuple[str, dict]] = {
+    "baidu_original": ("ring", {"chunks": 1, "bidirectional": False,
+                                "wire_dtype": None, "local_op": "jnp"}),
+    "fused_ring": ("ring", {}),
+    "fused_ring_hierarchical": ("ring_hier", {}),
+    "fused_ring_compressed": ("ring_compressed", {}),
+    "native_psum": ("psum", {"fuse": False}),
+    "native_psum_fused": ("psum", {}),
+}
+
+
+@dataclass(frozen=True)
+class CommConfig:
+    """Static (compile-time) description of the communication substrate."""
+
+    transport: str = "ring_hier"
+    data_axes: tuple[str, ...] = ("pod", "data")
+    bucket_bytes: int = 4 * 2**20
+    channels: int = 0              # 0 = unconstrained; N = N guaranteed rails
+    chunks: int = 2                # per-segment ppermute chains (ring only)
+    bidirectional: bool = True
+    wire_dtype: str | None = None
+    codec_block: int = 512
+    local_op: str = "jnp"          # "jnp" | "pallas" (kernels/reduce_add)
+    mean: bool = True
+    fuse: bool = True              # False: per-tensor collectives, no buckets
+
+    def ring_config(self, codec: str | None = None) -> RingConfig:
+        return RingConfig(chunks=self.chunks, bidirectional=self.bidirectional,
+                          wire_dtype=self.wire_dtype, local_op=self.local_op,
+                          codec=codec, codec_block=self.codec_block)
+
+
+class Communicator:
+    """Channelized collectives over the data axes of ``mesh``."""
+
+    def __init__(self, mesh: Mesh, cfg: CommConfig = CommConfig()):
+        spec, cls = get_transport(cfg.transport)   # unknown -> ValueError
+        if cfg.wire_dtype not in spec.wire_dtypes:
+            raise ValueError(
+                f"transport {cfg.transport!r} does not support "
+                f"wire_dtype={cfg.wire_dtype!r} (allowed: {spec.wire_dtypes})")
+        if cfg.channels < 0:
+            raise ValueError(f"channels must be >= 0, got {cfg.channels}")
+        if cfg.chunks < 1:
+            raise ValueError(f"chunks must be >= 1, got {cfg.chunks}")
+        if not cfg.fuse and spec.supports_rs:
+            # ring schedules need the bucketer's alignment guarantees;
+            # unfused (per-tensor) mode is only safe on native collectives
+            raise ValueError(
+                f"transport {cfg.transport!r} requires fused aligned buckets "
+                f"(fuse=True); only native transports support fuse=False")
+        self.mesh = mesh
+        self.cfg = cfg
+        self.spec = spec
+        self.axes = reduce_axes_of(mesh.axis_names, cfg.data_axes)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.axis_sizes = tuple(sizes[a] for a in self.axes)
+        self.world = 1
+        for s in self.axis_sizes:
+            self.world *= s
+        self._ring_cfg = cfg.ring_config(codec=spec.codec)
+        self.transport: Transport = cls(self.axes, self._ring_cfg)
+        pad = self.transport.flat_divisor(self.axis_sizes)
+        self.bucketer = GradientBucketer(bucket_bytes=cfg.bucket_bytes,
+                                         pad_multiple=pad)
+        self._ef = (ErrorFeedback(self._ring_cfg.make_codec())
+                    if spec.codec is not None else None)
+
+    # -- layout / planning ---------------------------------------------------
+
+    @property
+    def ordered_axes(self) -> tuple[str, ...]:
+        """Innermost (fastest / intra-pod) axis first."""
+        return self.transport.ordered_axes
+
+    def stripe(self, bucket_sizes: Sequence[int]
+               ) -> tuple[ChannelAssignment, ...]:
+        """Partition a bucket list across the virtual channels.
+
+        With ``channels == 0`` every bucket gets its own channel (fully
+        independent collectives); otherwise exactly ``cfg.channels`` rails.
+        """
+        n = self.cfg.channels if self.cfg.channels >= 1 else max(len(bucket_sizes), 1)
+        return assign_channels(bucket_sizes, n)
+
+    def plan(self, tree) -> CommPlan:
+        """Full communication plan for one gradient-shaped pytree."""
+        bplan = self.bucketer.plan(tree)
+        chans = self.stripe(bplan.bucket_sizes)
+        n = max(bplan.used_elems, 1)
+        codec = self._ring_cfg.make_codec()
+        wire_per_elem = codec.wire_bytes(n) / n
+        bytes_dev = self.transport.predicted_bytes_per_device(
+            bplan.used_elems, self.axis_sizes)
+        return CommPlan(transport=self.cfg.transport, axes=self.axes,
+                        axis_sizes=self.axis_sizes, bucket_plan=bplan,
+                        channels=chans, wire_bytes_per_elem=wire_per_elem,
+                        bytes_per_device=bytes_dev)
+
+    # -- channelized execution (inside a fully-manual shard_map) -------------
+
+    def _run_striped(self, op, items: list) -> list:
+        """Apply ``op`` to every flat buffer, honouring channel striping:
+        buffers on the same rail are chained (``order_token``, so each rail
+        issues FIFO), rails stay independent."""
+        if self.cfg.channels < 1:
+            return [op(x) for x in items]
+        out: list = [None] * len(items)
+        for assignment in self.stripe([int(x.shape[0]) for x in items]):
+            dep = None
+            for i in assignment.buckets:
+                y = op(order_token(dep, items[i]))
+                dep = y.reshape(-1)[0]
+                out[i] = y
+        return out
+
+    def all_reduce(self, buckets: list) -> list:
+        """Sum each flat bucket over the data axes (no mean)."""
+        return self._run_striped(self.transport.all_reduce, buckets)
+
+    def reduce_scatter(self, buckets: list) -> list:
+        """Sum-and-shard each flat bucket (inner axis segments first)."""
+        if not self.spec.supports_rs:
+            raise ValueError(
+                f"transport {self.cfg.transport!r} does not support "
+                f"reduce-scatter (supports_rs=False)")
+        return self._run_striped(self.transport.reduce_scatter, buckets)
+
+    def all_gather(self, shards: list) -> list:
+        """Inverse of :meth:`reduce_scatter` (same ownership layout)."""
+        if not self.spec.supports_rs:
+            raise ValueError(
+                f"transport {self.cfg.transport!r} does not support "
+                f"all-gather (supports_rs=False)")
+        return self._run_striped(self.transport.all_gather, shards)
+
+    def gather_flat(self, shard: jax.Array, *, native: bool = False) -> jax.Array:
+        """Per-axis all-gather of one flat shard (FSDP weight path).
+
+        ``native=True`` emits one XLA all-gather op per axis (its autodiff
+        transpose is ``psum_scatter``); otherwise the transport's unrolled
+        ring schedule is used (transpose == ring reduce-scatter-sum)."""
+        if native:
+            for ax in self.axes:               # outermost first
+                shard = lax.all_gather(shard, ax, tiled=True)
+            return shard
+        return self.transport.all_gather(shard)
+
+    def halo_exchange(self, x: jax.Array, specs: Sequence[HaloSpec], *,
+                      schedule: str | None = None) -> dict:
+        """Cartesian halo exchange sharing the communicator's channel knob:
+        ``channels >= 2`` splits every face across that many independent
+        rails (the paper's threaded multi-EP columns)."""
+        if schedule is None:
+            schedule = "chunked" if self.cfg.channels >= 2 else "concurrent"
+        chunks = self.cfg.channels if self.cfg.channels >= 1 else 4
+        return _halo_exchange(x, specs, schedule=schedule, chunks=chunks)
+
+    # -- tree-level ops (inside a fully-manual shard_map) --------------------
+
+    def _mean_buckets(self, buckets: list) -> list:
+        if not self.cfg.mean:
+            return buckets
+        inv = jnp.asarray(1.0 / self.world, jnp.float32)
+        return [b * inv for b in buckets]
+
+    def _mean_tree(self, tree):
+        if not self.cfg.mean:
+            return tree
+        inv = 1.0 / self.world
+        return jax.tree.map(
+            lambda x: (x.astype(jnp.float32) * inv).astype(x.dtype), tree)
+
+    def all_reduce_tree(self, grads, ef_state=None):
+        """All-reduce(-mean) a local gradient pytree.  Returns
+        ``(reduced, new_ef_state)``; ``ef_state`` passes through as ``None``
+        unless the transport carries a lossy codec."""
+        if not self.axes:
+            return grads, ef_state
+        if not self.cfg.fuse:
+            red = jax.tree.map(lambda x: self.transport.all_reduce(x), grads)
+            return self._mean_tree(red), ef_state
+        buckets, bplan = self.bucketer.bucketize(grads)
+        new_res = ef_state
+        if self._ef is not None and ef_state is not None:
+            buckets, new_res = self._ef.compensate(buckets, list(ef_state))
+        reduced = self._mean_buckets(self.all_reduce(buckets))
+        return self.bucketer.debucketize(reduced, bplan), new_res
+
+    def reduce_scatter_tree(self, grads):
+        """Reduce-scatter(-mean) into flat bucket shards (ZeRO path).
+        Returns ``(shards, bucket_plan)``; invert with
+        :meth:`all_gather_buckets`."""
+        buckets, bplan = self.bucketer.bucketize(grads)
+        inv = jnp.asarray(1.0 / self.world if self.cfg.mean else 1.0,
+                          jnp.float32)
+        shards = [s * inv for s in self.reduce_scatter(buckets)]
+        return shards, bplan
+
+    def all_gather_buckets(self, shards: list, bplan: BucketPlan | None = None):
+        """Inverse of :meth:`reduce_scatter_tree`: full buckets, or the
+        debucketized tree when ``bplan`` is given."""
+        full = self.all_gather(shards)
+        return full if bplan is None else self.bucketer.debucketize(full, bplan)
+
+    # -- SPMD wrappers (called OUTSIDE shard_map) ----------------------------
+
+    def reduce(self, grads, specs, ef_state=None):
+        """Reduce ``grads`` (mean over the data axes) from the SPMD level.
+
+        ``specs``: pytree of ``PartitionSpec`` congruent with ``grads`` (the
+        model-sharding of each gradient).  Returns ``(reduced, ef_state)``.
+        """
+        if not self.axes:
+            return grads, ef_state
+        ef_spec = P(tuple(self.mesh.axis_names))
+        has_ef = self._ef is not None and ef_state is not None
+        in_specs = (specs, ef_spec) if has_ef else (specs,)
+        out_specs = (specs, ef_spec) if has_ef else (specs,)
+
+        def inner(*args):
+            red, new_res = self.all_reduce_tree(
+                args[0], args[1] if has_ef else None)
+            return (red, new_res) if has_ef else (red,)
+
+        args = (grads, ef_state) if has_ef else (grads,)
+        out = compat.shard_map(inner, mesh=self.mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_vma=False)(*args)
+        return (out[0], out[1]) if has_ef else (out[0], ef_state)
+
+    def init_ef_state(self, grads_like, specs):
+        """Zero residual buckets as *global* arrays, one local bucket per
+        device (leading dim = all mesh axes); ``grads_like`` may be
+        ``ShapeDtypeStruct``s.  ``None`` when the transport is lossless."""
+        if self._ef is None:
+            return None
+        ef_spec = P(tuple(self.mesh.axis_names))
+
+        def inner(g):
+            buckets, _ = self.bucketer.bucketize(g)
+            return [jnp.zeros_like(b) for b in buckets]
+
+        fn = compat.shard_map(inner, mesh=self.mesh, in_specs=(specs,),
+                              out_specs=ef_spec, check_vma=False)
+        return jax.jit(fn)(grads_like) if not _is_abstract(grads_like) \
+            else jax.eval_shape(fn, grads_like)
+
+    # -- analysis ------------------------------------------------------------
+
+    def predicted_collective_bytes(self, grads_like) -> dict[str, float]:
+        """Napkin-math wire bytes per device (reads the :class:`CommPlan`)."""
+        return self.plan(grads_like).predicted_collective_bytes()
+
+
+def _is_abstract(tree) -> bool:
+    leaves = jax.tree.leaves(tree)
+    return bool(leaves) and isinstance(leaves[0], jax.ShapeDtypeStruct)
+
+
+def comm_config_from_policy(policy: str, **fields) -> CommConfig:
+    """Map a legacy ``ReduceConfig.policy`` name onto a :class:`CommConfig`.
+
+    ``fields`` are CommConfig overrides taken from the legacy config; the
+    policy's own forced overrides (e.g. ``baidu_original`` => unidirectional
+    single-chunk) win over them.
+    """
+    try:
+        transport, forced = POLICY_TO_TRANSPORT[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {policy!r}; one of "
+            f"{tuple(POLICY_TO_TRANSPORT)}") from None
+    base = CommConfig(transport=transport)
+    merged = {**fields, **forced}
+    known = {k: v for k, v in merged.items() if hasattr(base, k)}
+    return replace(base, **known)

@@ -1,0 +1,119 @@
+"""CommPlan: one object describing how a gradient pytree moves.
+
+Fuses the three views that used to live in three places:
+
+* the :class:`~repro.core.bucketing.BucketPlan` (which leaf lands where in
+  which fused buffer — the paper's guaranteed-large-buffer layout);
+* the **channel assignment** (which bucket rides which virtual channel —
+  the paper's multi-rail PSM2 endpoints as a config knob);
+* the **predicted wire bytes** (the napkin-math roofline term that
+  ``GradientReducer.predicted_collective_bytes`` used to compute).
+
+Benchmarks and the dry-run report read this one object.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.core.bucketing import BucketPlan
+
+
+@dataclass(frozen=True)
+class ChannelAssignment:
+    """Buckets carried by one virtual channel (independent collective)."""
+
+    channel: int
+    buckets: tuple[int, ...]   # indices into the bucket list, ascending
+    elems: int                 # total padded elements on this channel
+
+
+def assign_channels(bucket_sizes: Sequence[int], channels: int
+                    ) -> tuple[ChannelAssignment, ...]:
+    """Greedy least-loaded striping of buckets across ``channels`` virtual
+    channels.  Deterministic: buckets are visited largest-first, ties broken
+    by index, and each lands on the currently lightest channel."""
+    n = max(int(channels), 1)
+    loads = [0] * n
+    members: list[list[int]] = [[] for _ in range(n)]
+    order = sorted(range(len(bucket_sizes)),
+                   key=lambda i: (-int(bucket_sizes[i]), i))
+    for i in order:
+        c = min(range(n), key=lambda j: (loads[j], j))
+        members[c].append(i)
+        loads[c] += int(bucket_sizes[i])
+    return tuple(ChannelAssignment(c, tuple(sorted(members[c])), loads[c])
+                 for c in range(n))
+
+
+@dataclass(frozen=True)
+class CommPlan:
+    """Bucket layout + channel striping + predicted bytes for one pytree."""
+
+    transport: str
+    axes: tuple[str, ...]
+    axis_sizes: tuple[int, ...]
+    bucket_plan: BucketPlan
+    channels: tuple[ChannelAssignment, ...]
+    wire_bytes_per_elem: float     # codec/wire-dtype bytes per element
+    bytes_per_device: float        # predicted all-reduce wire bytes/device
+
+    @property
+    def n_buckets(self) -> int:
+        return self.bucket_plan.n_buckets
+
+    @property
+    def n_channels(self) -> int:
+        return len(self.channels)
+
+    @property
+    def total_elems(self) -> int:
+        return self.bucket_plan.total_elems
+
+    @property
+    def world(self) -> int:
+        w = 1
+        for p in self.axis_sizes:
+            w *= p
+        return w
+
+    def bucket_channel(self, bucket: int) -> int:
+        for a in self.channels:
+            if bucket in a.buckets:
+                return a.channel
+        raise KeyError(bucket)
+
+    @property
+    def channel_imbalance(self) -> float:
+        """max/mean channel load (1.0 = perfectly striped)."""
+        loads = [a.elems for a in self.channels]
+        mean = sum(loads) / max(len(loads), 1)
+        return max(loads) / mean if mean else 1.0
+
+    def predicted_collective_bytes(self) -> dict[str, float]:
+        """The dict ``GradientReducer.predicted_collective_bytes`` returned,
+        plus the channel-level breakdown."""
+        used = self.bucket_plan.used_elems
+        return {
+            "bytes_per_device": self.bytes_per_device,
+            "grad_bytes": used * 4.0,
+            "wire_bytes_per_elem": self.wire_bytes_per_elem,
+            "n_channels": float(self.n_channels),
+            "channel_imbalance": self.channel_imbalance,
+        }
+
+    def describe(self) -> dict:
+        """JSON-friendly summary for the dry-run report."""
+        return {
+            "transport": self.transport,
+            "axes": list(self.axes),
+            "axis_sizes": list(self.axis_sizes),
+            "world": self.world,
+            "n_buckets": self.n_buckets,
+            "total_elems": self.total_elems,
+            "padding_waste": self.bucket_plan.padding_waste,
+            "channels": [{"channel": a.channel, "buckets": list(a.buckets),
+                          "elems": a.elems} for a in self.channels],
+            **self.predicted_collective_bytes(),
+        }

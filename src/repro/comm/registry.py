@@ -1,0 +1,219 @@
+"""Transport registry: named collective schedules with declared capabilities.
+
+A *transport* is one way of moving a flat, pre-padded bucket across the data
+axes of the mesh — the role the PSM2 endpoint configuration plays in the
+paper.  Each transport registers itself under a short name together with a
+:class:`TransportSpec` declaring what it can do (``supports_rs`` for the
+ZeRO reduce-scatter/all-gather paths, ``supports_codec`` / ``wire_dtypes``
+for lossy or narrow wire formats), so an invalid combination fails when the
+:class:`~repro.comm.api.Communicator` is constructed — not at trace time
+deep inside a jitted step.
+
+Built-in transports (the former ``ReduceConfig.policy`` branches):
+
+========================  ====================================================
+``ring``                  flat multi-channel bidirectional ring (pod-oblivious)
+``ring_hier``             pod-aware hierarchical ring (RS inner, recurse outer)
+``ring_compressed``       hierarchical ring with int8 block codec on the wire
+``psum``                  XLA's native all-reduce (vendor reference)
+========================  ====================================================
+
+Third-party schedules register the same way::
+
+    @register_transport("my_ring", supports_rs=True)
+    class MyRing(RingTransport):
+        ...
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence, Type
+
+import jax
+from jax import lax
+
+from repro.core import ring as ring_lib
+from repro.core.ring import RingConfig
+
+WIRE_DTYPES_ANY = (None, "bfloat16", "float16", "float32")
+
+
+@dataclass(frozen=True)
+class TransportSpec:
+    """Construction-time capability declaration of one transport."""
+
+    name: str
+    supports_rs: bool                      # reduce_scatter / all_gather pairs
+    supports_codec: bool                   # lossy block codec on the wire
+    wire_dtypes: tuple[str | None, ...]    # allowed narrow wire dtypes
+    codec: str | None                      # codec this transport always uses
+    hierarchical: bool                     # pod-aware byte accounting
+    description: str
+
+
+_TRANSPORTS: dict[str, tuple[TransportSpec, Type["Transport"]]] = {}
+
+
+def register_transport(name: str, *, supports_rs: bool,
+                       supports_codec: bool = False,
+                       wire_dtypes: tuple[str | None, ...] = WIRE_DTYPES_ANY,
+                       codec: str | None = None,
+                       hierarchical: bool = False,
+                       description: str = "") -> Callable[[type], type]:
+    """Class decorator registering a :class:`Transport` under ``name``."""
+
+    def deco(cls: type) -> type:
+        if name in _TRANSPORTS:
+            raise ValueError(f"transport {name!r} already registered")
+        spec = TransportSpec(name=name, supports_rs=supports_rs,
+                             supports_codec=supports_codec,
+                             wire_dtypes=wire_dtypes, codec=codec,
+                             hierarchical=hierarchical,
+                             description=description or (cls.__doc__ or "").strip())
+        _TRANSPORTS[name] = (spec, cls)
+        cls.spec = spec
+        return cls
+
+    return deco
+
+
+def get_transport(name: str) -> tuple[TransportSpec, Type["Transport"]]:
+    """Lookup; raises with the full menu on an unknown name."""
+    try:
+        return _TRANSPORTS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown transport {name!r}; registered transports: "
+            f"{tuple(sorted(_TRANSPORTS))}") from None
+
+
+def list_transports() -> tuple[str, ...]:
+    return tuple(sorted(_TRANSPORTS))
+
+
+def transport_specs() -> dict[str, TransportSpec]:
+    return {name: spec for name, (spec, _) in _TRANSPORTS.items()}
+
+
+# ---------------------------------------------------------------------------
+# transport implementations
+# ---------------------------------------------------------------------------
+
+
+class Transport:
+    """One collective schedule over the data axes.
+
+    All methods run *inside* a fully-manual ``shard_map`` on flat 1-D buffers
+    already padded to :meth:`flat_divisor` (``core.bucketing`` guarantees
+    that).  ``axes`` is mesh-ordered (outermost first, e.g. ``("pod",
+    "data")``); schedules that care about pod locality reverse it themselves.
+    """
+
+    spec: TransportSpec  # filled in by @register_transport
+
+    def __init__(self, axes: Sequence[str], ring_cfg: RingConfig):
+        self.axes = tuple(axes)
+        self.ring_cfg = ring_cfg
+
+    # inner (fastest / intra-pod) axis first — RS ownership order
+    @property
+    def ordered_axes(self) -> tuple[str, ...]:
+        return tuple(reversed(self.axes))
+
+    def flat_divisor(self, axis_sizes: Sequence[int]) -> int:
+        return self.ring_cfg.flat_divisor(axis_sizes)
+
+    # -- collectives --------------------------------------------------------
+
+    def all_reduce(self, flat: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def reduce_scatter(self, flat: jax.Array) -> jax.Array:
+        raise NotImplementedError(
+            f"transport {self.spec.name!r} does not support reduce-scatter")
+
+    def all_gather(self, shard: jax.Array) -> jax.Array:
+        raise NotImplementedError(
+            f"transport {self.spec.name!r} does not support all-gather")
+
+    # -- analysis -----------------------------------------------------------
+
+    def predicted_bytes_per_device(self, n_elems: int,
+                                   axis_sizes: Sequence[int]) -> float:
+        """Napkin-math wire bytes per device for one all-reduce of
+        ``n_elems`` elements (§Perf hypothesis logs / dry-run report)."""
+        codec = self.ring_cfg.make_codec()
+        wire_per_elem = codec.wire_bytes(max(n_elems, 1)) / max(n_elems, 1)
+        if self.spec.hierarchical and len(axis_sizes) > 0:
+            inner_p = axis_sizes[-1]
+            world = 1
+            for p in axis_sizes:
+                world *= p
+            outer = world // max(inner_p, 1)
+            inner_bytes = 2 * (inner_p - 1) / max(inner_p, 1) * n_elems * wire_per_elem
+            outer_bytes = (2 * (outer - 1) / outer * (n_elems / inner_p)
+                           * wire_per_elem if outer > 1 else 0.0)
+            return inner_bytes + outer_bytes
+        total = 0.0
+        for p in axis_sizes:
+            total += 2 * (p - 1) / max(p, 1) * n_elems * wire_per_elem
+        return total
+
+
+@register_transport(
+    "ring", supports_rs=True,
+    description="flat multi-channel bidirectional ppermute ring; every byte "
+                "crosses every axis at full size (pod-oblivious baseline)")
+class RingTransport(Transport):
+    """Flat ring: full-size ring all-reduce per data axis in turn."""
+
+    def all_reduce(self, flat: jax.Array) -> jax.Array:
+        return ring_lib.flat_all_reduce(flat, self.axes, self.ring_cfg)
+
+    def reduce_scatter(self, flat: jax.Array) -> jax.Array:
+        for axis in self.ordered_axes:
+            flat = ring_lib.ring_reduce_scatter(flat, axis, self.ring_cfg)
+        return flat
+
+    def all_gather(self, shard: jax.Array) -> jax.Array:
+        for axis in reversed(self.ordered_axes):
+            shard = ring_lib.ring_all_gather(shard, axis, self.ring_cfg)
+        return shard
+
+
+@register_transport(
+    "ring_hier", supports_rs=True, hierarchical=True,
+    description="pod-aware hierarchical ring: reduce-scatter the intra-pod "
+                "axis first so cross-pod bytes shrink by the pod size")
+class HierRingTransport(RingTransport):
+    """Hierarchical ring (the paper's optimised schedule; default)."""
+
+    def all_reduce(self, flat: jax.Array) -> jax.Array:
+        return ring_lib.hierarchical_all_reduce(flat, self.ordered_axes,
+                                                self.ring_cfg)
+
+
+@register_transport(
+    "ring_compressed", supports_rs=True, supports_codec=True, codec="int8",
+    hierarchical=True, wire_dtypes=(None,),
+    description="hierarchical ring carrying block-int8 payloads with "
+                "source error feedback (beyond-paper)")
+class CompressedRingTransport(HierRingTransport):
+    """Hierarchical ring with an int8 block codec on every hop."""
+
+
+@register_transport(
+    "psum", supports_rs=False, wire_dtypes=(None,),
+    description="XLA's built-in all-reduce (vendor reference point); "
+                "no explicit schedule, no RS/AG decomposition")
+class PsumTransport(Transport):
+    """Native ``lax.psum`` over the data axes."""
+
+    def all_reduce(self, flat: jax.Array) -> jax.Array:
+        return lax.psum(flat, self.axes)
+
+    def predicted_bytes_per_device(self, n_elems: int,
+                                   axis_sizes: Sequence[int]) -> float:
+        # assume the vendor collective is also a bandwidth-optimal ring
+        return super().predicted_bytes_per_device(n_elems, axis_sizes)

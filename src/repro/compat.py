@@ -1,0 +1,82 @@
+"""Version-portability shims over the installed JAX.
+
+The communication stack leans on a handful of APIs whose spelling moved
+between JAX releases:
+
+* ``jax.shard_map``      — top-level since ~0.6; previously
+  ``jax.experimental.shard_map.shard_map`` with ``check_rep`` instead of
+  ``check_vma``.
+* ``jax.lax.axis_size``  — newer; older releases spell the (static) axis
+  size as ``lax.psum(1, axis)``, which constant-folds to a Python int.
+* ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)`` —
+  newer; older meshes take no axis-type argument.
+
+Everything in ``repro`` that touches one of these goes through this module
+so the repo runs unmodified on either side of the API break.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Any, Sequence
+
+import jax
+from jax import lax
+
+try:  # newer jax
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    HAS_AXIS_TYPE = True
+except ImportError:  # pragma: no cover - depends on installed jax
+    HAS_AXIS_TYPE = False
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for ``jax.sharding.AxisType`` on older releases.
+
+        Older JAX has no explicit/auto/manual axis-type machinery; meshes
+        behave like ``Auto`` everywhere, so the enum only needs to exist for
+        call sites that spell ``AxisType.Auto``.
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types: tuple | None = None, devices=None) -> Any:
+    """``jax.make_mesh`` that tolerates the absence of ``axis_types``."""
+    kwargs = {} if devices is None else {"devices": devices}
+    if HAS_AXIS_TYPE:
+        kinds = axis_types or (AxisType.Auto,) * len(tuple(axis_shapes))
+        try:
+            return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                                 axis_types=kinds, **kwargs)
+        except TypeError:  # AxisType importable but make_mesh predates kwarg
+            pass
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the ``check_vma``/``check_rep`` rename papered
+    over; falls back to ``jax.experimental.shard_map`` when the top-level
+    entry point is missing."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy_sm
+
+    return legacy_sm(f, mesh, in_specs, out_specs, check_rep=check_vma)
+
+
+def axis_size(axis) -> int:
+    """Static size of a named mesh axis inside a manual/collective context.
+
+    ``lax.psum`` of a concrete Python scalar constant-folds to the axis size
+    as a plain int, which is exactly what ``lax.axis_size`` returns on newer
+    releases.
+    """
+    fn = getattr(lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis)
+    return lax.psum(1, axis)

@@ -1,18 +1,30 @@
-"""Core of the reproduction: explicit, schedulable communication.
+"""Core of the reproduction: the communication *kernels* underneath
+:mod:`repro.comm`.
 
 The paper's contribution — near-wirespeed gradient reduction and halo
-exchange via guaranteed large buffers + multi-channel concurrency — lives
-here as composable JAX modules:
+exchange via guaranteed large buffers + multi-channel concurrency — is
+surfaced through the unified :class:`repro.comm.Communicator` API: named
+transports in a registry, virtual-channel striping as a config knob, and a
+:class:`repro.comm.CommPlan` fusing bucket layout, channel assignment and
+predicted wire bytes.  This package provides the building blocks those
+transports are made of:
 
 * :mod:`repro.core.ring`        — ppermute ring collectives (bi-directional,
   chunked, hierarchical/pod-aware, codec-capable).
 * :mod:`repro.core.bucketing`   — fused persistent gradient buckets (the
   'guaranteed huge pages' analogue).
-* :mod:`repro.core.reducer`     — policy facade: baidu_original baseline vs
-  optimised schedules vs native XLA collectives.
-* :mod:`repro.core.halo`        — Cartesian halo exchange (QCD workload).
+* :mod:`repro.core.halo`        — Cartesian halo exchange (QCD workload);
+  reachable as ``Communicator.halo_exchange``.
 * :mod:`repro.core.compression` — wire codecs + error feedback.
 * :mod:`repro.core.overlap`     — gradient-accumulation overlap policies.
+* :mod:`repro.core.reducer`     — DEPRECATED ``GradientReducer`` shim kept
+  for legacy string-policy call sites; delegates to ``repro.comm``.
+
+New code should construct a ``Communicator`` rather than reaching for these
+modules directly::
+
+    from repro.comm import CommConfig, Communicator
+    comm = Communicator(mesh, CommConfig(transport="ring_hier", channels=2))
 """
 
 from repro.core.bucketing import BucketPlan, GradientBucketer

@@ -13,7 +13,10 @@ the paper's experimental columns:
   channels (the 'Threaded' multi-EP columns).
 
 Runs inside ``shard_map`` with the participating axes manual.  Used by the
-QCD-style stencil example and by context/sequence-parallel layers.
+QCD-style stencil example and by context/sequence-parallel layers; the
+preferred entry point is :meth:`repro.comm.Communicator.halo_exchange`,
+which ties the ``chunks`` knob to the communicator's virtual channels so
+SGD reduction and QCD halo share one multi-rail configuration.
 """
 
 from __future__ import annotations
@@ -25,7 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.topology import ring_perm
+from repro import compat
+from repro.core.topology import order_token, ring_perm
 
 SCHEDULES = ("sequential", "concurrent", "chunked")
 
@@ -61,7 +65,7 @@ def _seq_token(dep: jax.Array, arrs: Sequence[jax.Array]) -> list[jax.Array]:
     """Thread a scalar data dependency through ``arrs`` to force ordering."""
     out = []
     for a in arrs:
-        a = a + jnp.zeros((), a.dtype) * dep.astype(a.dtype)
+        a = order_token(dep, a)
         dep = a.reshape(-1)[0]
         out.append(a)
     return out
@@ -80,7 +84,7 @@ def halo_exchange(x: jax.Array, specs: Sequence[HaloSpec], *,
 
     sends = []  # (key, payloads, axis, direction)
     for s in specs:
-        p = lax.axis_size(s.axis)
+        p = compat.axis_size(s.axis)
         if p == 1:
             # self-neighbour: periodic wrap is the identity exchange
             sends.append(((s.axis, "-"), [_face(x, s.dim, lo=False, width=s.halo)], s.axis, +1))
@@ -95,7 +99,7 @@ def halo_exchange(x: jax.Array, specs: Sequence[HaloSpec], *,
     out: dict = {}
     dep = None
     for key, payloads, axis, direction in sends:
-        p = lax.axis_size(axis)
+        p = compat.axis_size(axis)
         perm = ring_perm(p, direction)
         if schedule == "sequential" and dep is not None:
             payloads = _seq_token(dep, payloads)

@@ -1,45 +1,41 @@
-"""GradientReducer — the paper's optimised gradient reduction as a first-class
-framework feature.
+"""GradientReducer — DEPRECATED shim over :class:`repro.comm.Communicator`.
 
-Policies (each a faithful point in the paper's before/after space):
+The string-policy reducer has been replaced by the unified ``repro.comm``
+subsystem: named transports in a registry (:mod:`repro.comm.registry`),
+channel striping and bucket layout fused into a :class:`repro.comm.CommPlan`,
+and one :class:`~repro.comm.Communicator` object shared by gradient
+reduction and halo exchange.  Policy names map onto transports:
 
-* ``baidu_original``  — the *published baseline* we accelerate, in JAX terms:
-  one collective per tensor (no fusion), unidirectional single-channel ring,
-  fp32 wire, flat (pod-oblivious) schedule.  This is the analogue of the
-  un-modified baidu-allreduce: per-call buffers, one comm thread, 4 KB pages.
-* ``fused_ring``      — + bucket fusion (T1/T2) + bidirectional chunked
-  multi-channel rings (T3) + fused fp32 local reduce (T4).
-* ``fused_ring_hierarchical`` — + pod-aware reduce-scatter/all-gather so
-  cross-pod bytes shrink by the intra-pod axis size.  **Default.**
-* ``fused_ring_compressed``   — + int8 block codec on the wire with source
-  error feedback (beyond-paper).
-* ``native_psum``     — XLA's built-in all-reduce, per tensor (vendor
-  reference point).
-* ``native_psum_fused`` — XLA's all-reduce over fused buckets (isolates the
-  fusion win from the schedule win).
+=========================  ==============================================
+``baidu_original``         ``ring`` (chunks=1, unidirectional, fp32 wire)
+``fused_ring``             ``ring``
+``fused_ring_hierarchical``  ``ring_hier``  (default)
+``fused_ring_compressed``  ``ring_compressed``
+``native_psum``            ``psum`` (fuse=False, per-tensor)
+``native_psum_fused``      ``psum``
+=========================  ==============================================
 
-The reducer runs inside the jitted train step via ``jax.shard_map`` with all
-mesh axes manual; tensor/model-sharded gradients are bucketed in each
-device's *local* address space, reduced over the data axes only, and handed
-back with their original sharding.
+Old call sites keep working unchanged; new code should construct a
+``Communicator`` directly::
+
+    from repro.comm import CommConfig, Communicator
+    comm = Communicator(mesh, CommConfig(transport="ring_hier", channels=2))
+    reduced, _ = comm.reduce(grads, specs)
 """
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field, replace
-from typing import Any, Sequence
+import warnings
+from dataclasses import dataclass, replace
 
 import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core import ring as ring_lib
-from repro.core.bucketing import GradientBucketer
-from repro.core.compression import ErrorFeedback
 from repro.core.ring import RingConfig
-from repro.core.topology import reduce_axes_of
+
+# NOTE: repro.comm is imported lazily inside the shim: repro.comm.api itself
+# imports repro.core submodules, and importing it here at module level would
+# close an import cycle through repro.core.__init__.
 
 POLICIES = ("baidu_original", "fused_ring", "fused_ring_hierarchical",
             "fused_ring_compressed", "native_psum", "native_psum_fused")
@@ -47,6 +43,8 @@ POLICIES = ("baidu_original", "fused_ring", "fused_ring_hierarchical",
 
 @dataclass(frozen=True)
 class ReduceConfig:
+    """Legacy string-policy config; converts to :class:`CommConfig`."""
+
     policy: str = "fused_ring_hierarchical"
     data_axes: tuple[str, ...] = ("pod", "data")
     bucket_bytes: int = 4 * 2**20
@@ -57,210 +55,79 @@ class ReduceConfig:
     local_op: str = "jnp"
     mean: bool = True
 
+    def comm_config(self, channels: int = 0):
+        from repro.comm.api import comm_config_from_policy
+
+        return comm_config_from_policy(
+            self.policy, data_axes=self.data_axes,
+            bucket_bytes=self.bucket_bytes, chunks=self.chunks,
+            bidirectional=self.bidirectional, wire_dtype=self.wire_dtype,
+            codec_block=self.codec_block, local_op=self.local_op,
+            mean=self.mean, channels=channels)
+
     def ring_config(self) -> RingConfig:
-        if self.policy == "baidu_original":
-            return RingConfig(chunks=1, bidirectional=False, wire_dtype=None,
-                              local_op="jnp")
+        ccfg = self.comm_config()
         codec = "int8" if self.policy == "fused_ring_compressed" else None
-        return RingConfig(chunks=self.chunks, bidirectional=self.bidirectional,
-                          wire_dtype=self.wire_dtype, local_op=self.local_op,
-                          codec=codec, codec_block=self.codec_block)
+        return ccfg.ring_config(codec=codec)
 
 
 class GradientReducer:
-    """Reduces a (possibly model-sharded) gradient pytree over the data axes."""
+    """Thin deprecated facade; every operation delegates to the
+    :class:`Communicator` it constructs."""
 
     def __init__(self, mesh: Mesh, cfg: ReduceConfig = ReduceConfig()):
+        from repro.comm.api import Communicator, POLICY_TO_TRANSPORT
+
         if cfg.policy not in POLICIES:
             raise ValueError(f"unknown policy {cfg.policy!r}; one of {POLICIES}")
+        warnings.warn(
+            "GradientReducer is deprecated; use repro.comm.Communicator "
+            f"(policy {cfg.policy!r} -> transport "
+            f"{POLICY_TO_TRANSPORT[cfg.policy][0]!r})",
+            DeprecationWarning, stacklevel=2)
         self.mesh = mesh
         self.cfg = cfg
-        self.axes = reduce_axes_of(mesh.axis_names, cfg.data_axes)
-        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        self.axis_sizes = tuple(sizes[a] for a in self.axes)
-        self.world = 1
-        for s in self.axis_sizes:
-            self.world *= s
-        rcfg = cfg.ring_config()
-        self._ring_cfg = rcfg
-        pad = rcfg.flat_divisor(self.axis_sizes)
-        self.bucketer = GradientBucketer(bucket_bytes=cfg.bucket_bytes,
-                                         pad_multiple=pad)
-        self._ef = (ErrorFeedback(rcfg.make_codec())
-                    if cfg.policy == "fused_ring_compressed" else None)
+        self.comm = Communicator(mesh, cfg.comm_config())
+        # legacy attribute surface
+        self.axes = self.comm.axes
+        self.axis_sizes = self.comm.axis_sizes
+        self.world = self.comm.world
+        self.bucketer = self.comm.bucketer
+        self._ring_cfg = self.comm._ring_cfg
+        self._ef = self.comm._ef
 
-    # -- schedule selection --------------------------------------------------
-
-    def _reduce_flat(self, flat: jax.Array) -> jax.Array:
-        cfg = self._ring_cfg
-        if self.cfg.policy in ("fused_ring_hierarchical", "fused_ring_compressed"):
-            # innermost mesh axis last in self.axes is the fastest-varying;
-            # reduce-scatter over it first (intra-pod), recurse outward.
-            ordered = tuple(reversed(self.axes))
-            return ring_lib.hierarchical_all_reduce(flat, ordered, cfg)
-        return ring_lib.flat_all_reduce(flat, self.axes, cfg)
-
-    # -- public API ------------------------------------------------------------
+    # -- public API ----------------------------------------------------------
 
     def __call__(self, grads, specs, ef_state=None):
         return self.reduce(grads, specs, ef_state)
 
     def reduce(self, grads, specs, ef_state=None):
-        """Reduce ``grads`` (mean over the data axes) inside a jitted step.
+        """SPMD-level reduce-mean; see :meth:`Communicator.reduce`."""
+        return self.comm.reduce(grads, specs, ef_state)
 
-        ``specs``: pytree of ``PartitionSpec`` congruent with ``grads``
-        (the model-sharding of each gradient).  Returns ``(reduced, ef_state)``
-        where ``ef_state`` is None unless the policy carries error feedback.
-        """
-        if not self.axes:
-            return grads, ef_state
-
-        ef_spec = P(tuple(self.mesh.axis_names))
-        has_ef = self._ef is not None and ef_state is not None
-        in_specs = (specs, ef_spec) if has_ef else (specs,)
-        out_specs = (specs, ef_spec) if has_ef else (specs,)
-
-        def inner(*args):
-            g = args[0]
-            if self.cfg.policy == "native_psum":
-                red = jax.tree.map(
-                    lambda x: lax.psum(x, self.axes), g)
-                red = self._maybe_mean_tree(red)
-                return (red, args[1]) if has_ef else (red,)
-
-            buckets, plan = self.bucketer.bucketize(g)
-            new_res = None
-            if has_ef:
-                residuals = list(args[1])
-                buckets, new_res = self._ef.compensate(buckets, residuals)
-            if self.cfg.policy == "native_psum_fused":
-                reduced = [lax.psum(b, self.axes) for b in buckets]
-            elif self.cfg.policy == "baidu_original":
-                # per-tensor: bucketer configured per-leaf below
-                reduced = [self._reduce_flat(b) for b in buckets]
-            else:
-                reduced = [self._reduce_flat(b) for b in buckets]
-            if self.cfg.mean:
-                inv = jnp.asarray(1.0 / self.world, jnp.float32)
-                reduced = [b * inv for b in reduced]
-            red_tree = self.bucketer.debucketize(reduced, plan)
-            return (red_tree, new_res) if has_ef else (red_tree,)
-
-        args = (grads, ef_state) if has_ef else (grads,)
-        out = jax.shard_map(inner, mesh=self.mesh, in_specs=in_specs,
-                            out_specs=out_specs, check_vma=False)(*args)
-        return (out[0], out[1]) if has_ef else (out[0], ef_state)
-
-    def _maybe_mean_tree(self, tree):
-        if not self.cfg.mean:
-            return tree
-        inv = 1.0 / self.world
-        return jax.tree.map(lambda x: (x.astype(jnp.float32) * inv).astype(x.dtype),
-                            tree)
-
-    # -- manual-mode entry points (called INSIDE a fully-manual shard_map) -----
+    # -- manual-mode entry points (called INSIDE a fully-manual shard_map) ---
 
     def _ordered_axes(self) -> tuple[str, ...]:
-        """Innermost (fastest/intra-pod) axis first for hierarchical order."""
-        return tuple(reversed(self.axes))
+        return self.comm.ordered_axes
 
     def reduce_manual(self, grads, ef_state=None):
-        """All-reduce-mean a local gradient pytree (full-manual context)."""
-        if not self.axes:
-            return grads, ef_state
-        if self.cfg.policy == "native_psum":
-            red = jax.tree.map(lambda x: lax.psum(x, self.axes), grads)
-            return self._maybe_mean_tree(red), ef_state
-        buckets, plan = self.bucketer.bucketize(grads)
-        new_res = ef_state
-        if self._ef is not None and ef_state is not None:
-            buckets, new_res = self._ef.compensate(buckets, list(ef_state))
-        if self.cfg.policy == "native_psum_fused":
-            reduced = [lax.psum(b, self.axes) for b in buckets]
-        else:
-            reduced = [self._reduce_flat(b) for b in buckets]
-        if self.cfg.mean:
-            inv = jnp.asarray(1.0 / self.world, jnp.float32)
-            reduced = [b * inv for b in reduced]
-        return self.bucketer.debucketize(reduced, plan), new_res
+        return self.comm.all_reduce_tree(grads, ef_state)
 
     def reduce_scatter_manual(self, grads):
-        """Reduce-scatter-mean into flat bucket shards (ZeRO path).
-
-        Hierarchical: RS over the intra-pod axis first, then RS the shard
-        over the pod axis.  Returns (shards, plan); invert with
-        :meth:`all_gather_manual`."""
-        buckets, plan = self.bucketer.bucketize(grads)
-        cfg = self._ring_cfg
-        shards = []
-        inv = jnp.asarray(1.0 / self.world if self.cfg.mean else 1.0,
-                          jnp.float32)
-        for b in buckets:
-            for axis in self._ordered_axes():
-                b = ring_lib.ring_reduce_scatter(b, axis, cfg)
-            shards.append(b * inv)
-        return shards, plan
+        return self.comm.reduce_scatter_tree(grads)
 
     def all_gather_manual(self, shards, plan=None):
-        """Inverse of :meth:`reduce_scatter_manual`; returns full buckets
-        (or the debucketized tree when ``plan`` is given)."""
-        cfg = self._ring_cfg
-        full = []
-        for s in shards:
-            for axis in reversed(self._ordered_axes()):
-                s = ring_lib.ring_all_gather(s, axis, cfg)
-            full.append(s)
-        return full if plan is None else self.bucketer.debucketize(full, plan)
+        return self.comm.all_gather_buckets(shards, plan)
 
-    # -- error-feedback state ---------------------------------------------------
+    # -- error-feedback state ------------------------------------------------
 
     def init_ef_state(self, grads_like, specs):
-        """Zero residual buckets, as *global* arrays sharded one-local-bucket
-        per device (leading dim = all mesh axes).  ``grads_like`` may be
-        ShapeDtypeStructs."""
-        if self._ef is None:
-            return None
-        ef_spec = P(tuple(self.mesh.axis_names))
+        return self.comm.init_ef_state(grads_like, specs)
 
-        def inner(g):
-            buckets, _ = self.bucketer.bucketize(g)
-            return [jnp.zeros_like(b) for b in buckets]
-
-        fn = jax.shard_map(inner, mesh=self.mesh, in_specs=(specs,),
-                           out_specs=ef_spec, check_vma=False)
-        return jax.jit(fn)(grads_like) if not _is_abstract(grads_like) \
-            else jax.eval_shape(fn, grads_like)
-
-    # -- analysis ----------------------------------------------------------------
+    # -- analysis ------------------------------------------------------------
 
     def predicted_collective_bytes(self, grads_like) -> dict[str, float]:
-        """Napkin-math bytes per device for §Perf hypothesis logs."""
-        leaves = jax.tree.leaves(grads_like)
-        n = sum(int(jnp.size(l)) if hasattr(l, "size") else 0 for l in leaves)
-        itemsize = 4
-        codec = self._ring_cfg.make_codec()
-        wire_per_elem = codec.wire_bytes(max(n, 1)) / max(n, 1)
-        out = {}
-        if self.cfg.policy in ("fused_ring_hierarchical", "fused_ring_compressed"):
-            inner_p = self.axis_sizes[-1]
-            outer = self.world // inner_p
-            # RS+AG on inner axis: 2*(p-1)/p * n; cross level on n/p shard
-            inner_bytes = 2 * (inner_p - 1) / inner_p * n * wire_per_elem
-            outer_bytes = (2 * (outer - 1) / outer * (n / inner_p) * wire_per_elem
-                           if outer > 1 else 0.0)
-            out["bytes_per_device"] = inner_bytes + outer_bytes
-        else:
-            total = 0.0
-            for p in self.axis_sizes:
-                total += 2 * (p - 1) / p * n * itemsize
-            out["bytes_per_device"] = total
-        out["grad_bytes"] = n * itemsize
-        return out
-
-
-def _is_abstract(tree) -> bool:
-    leaves = jax.tree.leaves(tree)
-    return bool(leaves) and isinstance(leaves[0], jax.ShapeDtypeStruct)
+        return self.comm.predicted_collective_bytes(grads_like)
 
 
 def per_tensor_reducer(mesh: Mesh, cfg: ReduceConfig) -> "GradientReducer":

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.core.compression import make_codec
 from repro.core.topology import ring_perm
 
@@ -104,7 +105,7 @@ def _rs_1d(x: jax.Array, axis: str, direction: int, cfg: RingConfig,
     """Ring reduce-scatter; device ``r`` ends owning the full sum of segment
     ``r`` (i.e. ``x[r*s:(r+1)*s]`` summed over the axis)."""
     accum = jnp.dtype(cfg.accum_dtype)
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     if p == 1:
         return x.astype(accum)
     r = lax.axis_index(axis)
@@ -131,7 +132,7 @@ def _ag_1d(shard: jax.Array, axis: str, direction: int, codec) -> jax.Array:
     The payload is encoded *once* at the source and forwarded verbatim, so a
     lossy codec costs a single quantisation (no per-hop compounding).
     """
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     if p == 1:
         return shard
     r = lax.axis_index(axis)
@@ -186,7 +187,7 @@ def ring_reduce_scatter(x: jax.Array, axis: str, cfg: RingConfig = RingConfig())
     ``x``: (L,), ``L % (p * channel_divisor) == 0``.  Returns device ``r``'s
     fully-reduced segment ``x[r*L/p:(r+1)*L/p]`` in ``cfg.accum_dtype``.
     """
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     L = x.shape[0]
     if L % max(p, 1) != 0:
         raise ValueError(f"flat length {L} not divisible by ring size {p}")
@@ -207,7 +208,7 @@ def ring_all_gather(shard: jax.Array, axis: str, cfg: RingConfig = RingConfig())
     """Inverse of :func:`ring_reduce_scatter` (same channel layout)."""
     seg = shard.shape[0]
     _check_divisible(seg, cfg)
-    p = lax.axis_size(axis)
+    p = compat.axis_size(axis)
     codec = cfg.make_codec()
     gathered = []  # (p, width) blocks in channel order
     for (start, width, direction) in _channel_slices(seg, cfg):

@@ -16,6 +16,8 @@ from typing import Sequence
 import jax
 from jax import lax
 
+from repro import compat
+
 Axis = str
 
 
@@ -27,7 +29,7 @@ def ring_perm(size: int, direction: int = +1) -> list[tuple[int, int]]:
 
 
 def axis_size(axis: Axis) -> int:
-    return lax.axis_size(axis)
+    return compat.axis_size(axis)
 
 
 def axis_index(axis: Axis):
@@ -55,6 +57,18 @@ class ChannelSpec:
 def channel_schedule(n_chunks: int, bidirectional: bool) -> list[ChannelSpec]:
     dirs = (+1, -1) if bidirectional else (+1,)
     return [ChannelSpec(d, c) for c in range(n_chunks) for d in dirs]
+
+
+def order_token(dep, x):
+    """Thread a scalar data dependency into ``x`` so XLA cannot reorder it
+    before ``dep`` is available (one rail / one sequential schedule step).
+    ``dep is None`` means no constraint.  The zero-multiply keeps the value
+    unchanged while making ``x`` data-dependent on ``dep``."""
+    import jax.numpy as jnp
+
+    if dep is None:
+        return x
+    return x + jnp.zeros((), x.dtype) * dep.astype(x.dtype)
 
 
 def padded_size(n: int, multiple: int) -> int:

@@ -23,12 +23,14 @@ import json
 import time
 import traceback
 
+from dataclasses import replace
+
 import jax
 import jax.numpy as jnp
 
+from repro.comm import POLICY_TO_TRANSPORT
 from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
 from repro.core.overlap import AccumConfig
-from repro.core.reducer import ReduceConfig
 from repro.data import make_batch_specs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (Roofline, collective_wire_bytes,
@@ -48,23 +50,72 @@ def _abstract_batch(model, shape_cfg):
 
 def make_step_config(arch: str, overrides: dict | None = None) -> TrainStepConfig:
     st = settings_for(arch)
+    ccfg = st.comm_config()
     kw = dict(dp_mode=st.dp_mode,
-              reduce=ReduceConfig(policy="fused_ring_hierarchical", chunks=2,
-                                  bucket_bytes=256 * 2**20),
               accum=AccumConfig(microbatches=st.microbatches,
                                 policy="accumulate_then_reduce"),
               causal_skip=False)
     if overrides:
+        # new-style comm_* keys hit CommConfig fields directly
+        comm_over = {k[5:]: v for k, v in overrides.items()
+                     if k.startswith("comm_")}
+        # legacy reduce_* keys: reduce_policy maps through the transport
+        # registry, the rest are shared field names
         red = {k[7:]: v for k, v in overrides.items() if k.startswith("reduce_")}
         accum = {k[6:]: v for k, v in overrides.items() if k.startswith("accum_")}
         rest = {k: v for k, v in overrides.items()
-                if not k.startswith(("reduce_", "accum_"))}
+                if not k.startswith(("reduce_", "accum_", "comm_"))}
+        policy = red.pop("policy", None)
         if red:
-            kw["reduce"] = ReduceConfig(**{**kw["reduce"].__dict__, **red})
+            ccfg = replace(ccfg, **red)
+        if policy is not None:
+            # after the shared fields, so a policy's forced overrides win —
+            # same precedence as comm_config_from_policy
+            if policy not in POLICY_TO_TRANSPORT:
+                raise ValueError(
+                    f"unknown reduce_policy {policy!r}; one of "
+                    f"{tuple(POLICY_TO_TRANSPORT)}")
+            transport, forced = POLICY_TO_TRANSPORT[policy]
+            ccfg = replace(ccfg, transport=transport, **forced)
+        if comm_over:
+            ccfg = replace(ccfg, **comm_over)
         if accum:
             kw["accum"] = AccumConfig(**{**kw["accum"].__dict__, **accum})
         kw.update(rest)
-    return TrainStepConfig(**kw)
+    return TrainStepConfig(comm=ccfg, **kw)
+
+
+def comm_plan_summary(model, mesh, tcfg: TrainStepConfig) -> dict:
+    """The :class:`repro.comm.CommPlan` the step will execute, as JSON —
+    the dry-run report and the benchmarks read the same object.
+
+    For fsdp the step buckets per parameter group with
+    ``fsdp_bucket_bytes`` (see :class:`FsdpPlan`), so the summary
+    aggregates one CommPlan per group rather than pretending the whole
+    tree rides one plan."""
+    from repro.runtime.train_step import FsdpPlan, _local_shapes, build_comm
+
+    if tcfg.dp_mode == "fsdp":
+        fplan = FsdpPlan(model, mesh, tcfg)
+        plans = [fplan.comm.plan(tree) for tree in fplan.groups.values()]
+        head = plans[0].describe()
+        return {
+            "transport": head["transport"],
+            "axes": head["axes"], "axis_sizes": head["axis_sizes"],
+            "world": head["world"],
+            "n_groups": len(plans),
+            "n_buckets": sum(p.n_buckets for p in plans),
+            "total_elems": sum(p.total_elems for p in plans),
+            "n_channels": head["n_channels"],
+            "bytes_per_device": sum(p.bytes_per_device for p in plans),
+            "grad_bytes": sum(
+                p.predicted_collective_bytes()["grad_bytes"] for p in plans),
+            "channel_imbalance": max(p.channel_imbalance for p in plans),
+        }
+    comm = build_comm(mesh, tcfg)
+    pspecs = model.param_specs(mesh)
+    local = _local_shapes(model.abstract_params(), pspecs, mesh)
+    return comm.plan(local).describe()
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
@@ -135,6 +186,8 @@ def analyse(lowered, n_dev: int, model, shape_cfg) -> dict:
     compile_s = time.time() - t0
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per computation
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     stats = collective_wire_bytes(txt)
 
@@ -176,6 +229,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     lowered, n_dev, model, shape_cfg = lower_cell(arch, shape_name, multi_pod,
                                                   overrides)
     out = analyse(lowered, n_dev, model, shape_cfg)
+    if shape_cfg.kind == "train":
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh:
+            out["comm_plan"] = comm_plan_summary(
+                model, mesh, make_step_config(arch, overrides))
     out.update({"arch": arch, "shape": shape_name,
                 "mesh": "2x16x16" if multi_pod else "16x16",
                 "devices": n_dev})

@@ -8,14 +8,15 @@ importing this module never touches jax device state — the dry-run must set
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod; the multi-pod mesh prepends a pod axis of 2."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(n_devices: int | None = None, model_parallel: int = 2):
@@ -24,8 +25,7 @@ def make_host_mesh(n_devices: int | None = None, model_parallel: int = 2):
     model = model_parallel
     while model > 1 and n % model:
         model //= 2
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh((n // model, model), ("data", "model"))
 
 
 def required_devices(multi_pod: bool) -> int:

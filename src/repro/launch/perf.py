@@ -7,9 +7,12 @@ tag in the shared dry-run JSON so report.py can diff baseline vs variants.
     PYTHONPATH=src python -m repro.launch.perf --arch llama3.2-1b \
         --shape train_4k --tag wire_bf16 --set reduce_wire_dtype=bfloat16
 
-Override keys: reduce_policy, reduce_chunks, reduce_bidirectional,
-reduce_wire_dtype, reduce_bucket_bytes, accum_microbatches, accum_policy,
-causal_skip, serve_weights, fsdp_gather, gather_dtype, fsdp_bucket_bytes.
+Override keys: comm_transport, comm_channels, comm_chunks,
+comm_bidirectional, comm_wire_dtype, comm_bucket_bytes (any CommConfig
+field as comm_<field>), accum_microbatches, accum_policy, causal_skip,
+serve_weights, fsdp_gather, gather_dtype, fsdp_bucket_bytes.  Legacy
+reduce_<field> keys still work; reduce_policy maps through the
+repro.comm transport registry.
 """
 
 import argparse

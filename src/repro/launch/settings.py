@@ -1,10 +1,13 @@
 """Per-architecture launch settings: DP mode, microbatching, serving weight
-residency.  Derived from napkin memory math against 16 GB/chip (validated by
+residency, and the communication substrate (transport + virtual channels).
+Memory numbers derive from napkin math against 16 GB/chip (validated by
 ``memory_analysis`` in the dry-run; see EXPERIMENTS.md §Dry-run)."""
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+
+from repro.comm import CommConfig
 
 
 @dataclass(frozen=True)
@@ -12,6 +15,14 @@ class ArchSettings:
     dp_mode: str            # replicated | zero1 | fsdp
     microbatches: int       # grad-accumulation slices for train_4k
     serve_weights: str      # resident | gathered
+    transport: str = "ring_hier"   # registered repro.comm transport
+    channels: int = 0       # virtual comm rails (0 = scheduler-unconstrained)
+
+    def comm_config(self, *, chunks: int = 2,
+                    bucket_bytes: int = 256 * 2**20) -> CommConfig:
+        """The architecture's production communicator config."""
+        return CommConfig(transport=self.transport, channels=self.channels,
+                          chunks=chunks, bucket_bytes=bucket_bytes)
 
 
 SETTINGS: dict[str, ArchSettings] = {
@@ -20,14 +31,16 @@ SETTINGS: dict[str, ArchSettings] = {
     "llama3.2-1b": ArchSettings("zero1", 1, "resident"),
     "minicpm-2b": ArchSettings("zero1", 2, "resident"),
     "hymba-1.5b": ArchSettings("zero1", 2, "resident"),
-    # medium/large: ZeRO-3 built from the paper's ring collectives
-    "qwen2-7b": ArchSettings("fsdp", 2, "resident"),
-    "falcon-mamba-7b": ArchSettings("fsdp", 4, "resident"),
-    "phi3-medium-14b": ArchSettings("fsdp", 4, "resident"),
-    "llava-next-34b": ArchSettings("fsdp", 8, "resident"),
-    "mixtral-8x7b": ArchSettings("fsdp", 4, "resident"),
+    # medium/large: ZeRO-3 built from the paper's ring collectives; the big
+    # gradient volumes get two guaranteed rails (paper: multi-EP striping)
+    "qwen2-7b": ArchSettings("fsdp", 2, "resident", channels=2),
+    "falcon-mamba-7b": ArchSettings("fsdp", 4, "resident", channels=2),
+    "phi3-medium-14b": ArchSettings("fsdp", 4, "resident", channels=2),
+    "llava-next-34b": ArchSettings("fsdp", 8, "resident", channels=2),
+    "mixtral-8x7b": ArchSettings("fsdp", 4, "resident", channels=2),
     # 400B: weights cannot reside on a 16-way model axis; serve gathers
-    "llama4-maverick-400b-a17b": ArchSettings("fsdp", 4, "gathered"),
+    "llama4-maverick-400b-a17b": ArchSettings("fsdp", 4, "gathered",
+                                              channels=2),
 }
 
 

@@ -10,13 +10,14 @@ host); on this container it runs reduced configs on host devices:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 
+from repro.comm import CommConfig, POLICY_TO_TRANSPORT, list_transports
 from repro.configs import get_config, list_archs, reduced_config
 from repro.configs.base import ShapeConfig
 from repro.core.overlap import AccumConfig
-from repro.core.reducer import POLICIES, ReduceConfig
 from repro.data import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.settings import settings_for
@@ -34,8 +35,13 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--policy", default="fused_ring_hierarchical",
-                    choices=POLICIES)
+    ap.add_argument("--transport", default=None, choices=list_transports(),
+                    help="repro.comm transport (default: the arch's setting)")
+    ap.add_argument("--channels", type=int, default=None,
+                    help="virtual comm rails (0 = unconstrained)")
+    ap.add_argument("--policy", default=None,
+                    choices=tuple(POLICY_TO_TRANSPORT),
+                    help="DEPRECATED legacy policy name; maps to a transport")
     ap.add_argument("--dp-mode", default=None, choices=DP_MODES)
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 mesh (needs 256 devices)")
@@ -58,10 +64,17 @@ def main() -> None:
                                       seq_len=args.seq,
                                       global_batch=args.batch),
                            model_cfg=cfg)
+    ccfg = st.comm_config(bucket_bytes=32 * 2**20)
+    if args.policy:
+        transport, forced = POLICY_TO_TRANSPORT[args.policy]
+        ccfg = dataclasses.replace(ccfg, transport=transport, **forced)
+    if args.transport:
+        ccfg = dataclasses.replace(ccfg, transport=args.transport)
+    if args.channels is not None:
+        ccfg = dataclasses.replace(ccfg, channels=args.channels)
     step_cfg = TrainStepConfig(
         dp_mode=args.dp_mode or (st.dp_mode if not args.reduced else "replicated"),
-        reduce=ReduceConfig(policy=args.policy, chunks=2,
-                            bucket_bytes=32 * 2**20),
+        comm=ccfg,
         optim=OptimConfig(base_lr=args.lr, warmup=min(20, args.steps // 5),
                           schedule=schedule, total_steps=args.steps),
         accum=AccumConfig(microbatches=1 if args.reduced else st.microbatches))

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 
 @dataclass(frozen=True)
 class ParallelCtx:
@@ -48,7 +50,7 @@ class ParallelCtx:
         return lax.pmax(x, self.model_axis) if self.model_axis else x
 
     def model_size(self) -> int:
-        return lax.axis_size(self.model_axis) if self.model_axis else 1
+        return compat.axis_size(self.model_axis) if self.model_axis else 1
 
     def model_index(self):
         return lax.axis_index(self.model_axis) if self.model_axis else 0
@@ -58,7 +60,7 @@ class ParallelCtx:
     def dp_world(self) -> int:
         n = 1
         for a in self.data_axes:
-            n *= lax.axis_size(a)
+            n *= compat.axis_size(a)
         return n
 
     def psum_data(self, x):

@@ -100,7 +100,6 @@ def elastic_remesh(n_devices: int, *, model_parallel: int = 16,
                    want_pods: int = 1):
     shape, names = elastic_shape(n_devices, model_parallel=model_parallel,
                                  want_pods=want_pods)
-    from jax.sharding import AxisType
+    from repro import compat
 
-    return jax.make_mesh(shape, names,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return compat.make_mesh(shape, names)

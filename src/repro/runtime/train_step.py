@@ -1,16 +1,21 @@
 """Train-step builders: the paper's communication engine fused into a
 fully-manual SPMD step.
 
-The step runs inside ``jax.shard_map`` with **every** mesh axis manual:
-tensor parallelism is explicit (``ParallelCtx.psum`` in the models), and the
-data-parallel gradient reduction is *our* ring schedule — XLA never inserts
-an opaque grad all-reduce, so §Perf before/after measures the paper's
-technique and nothing else.
+The step runs inside ``shard_map`` with **every** mesh axis manual: tensor
+parallelism is explicit (``ParallelCtx.psum`` in the models), and the
+data-parallel gradient reduction is the :class:`repro.comm.Communicator`'s
+transport — XLA never inserts an opaque grad all-reduce, so §Perf
+before/after measures the paper's technique and nothing else.  All three DP
+modes draw their collectives from the same communicator: all-reduce
+(replicated), reduce-scatter/all-gather of flat bucket shards (ZeRO-1), and
+per-layer weight gather whose autodiff transpose is the reduce-scatter
+(FSDP/ZeRO-3).
 
 DP modes (rungs of the paper's ladder):
 
 * ``replicated`` — params + optimizer state replicated over data; grads
-  all-reduced (mean) by the ``GradientReducer``.  The 2017 paper's setting.
+  all-reduced (mean) by the communicator's transport.  The 2017 paper's
+  setting.
 * ``zero1``      — grads *reduce-scattered* into flat bucket shards; AdamW
   updates the shard; the param **delta** is ring-all-gathered and applied.
   Same comm volume as all-reduce (RS+AG), optimizer memory / dp_world.
@@ -24,7 +29,7 @@ DP modes (rungs of the paper's ladder):
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any
 
 import jax
@@ -33,10 +38,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 import numpy as np
 
-from repro.core import ring as ring_lib
-from repro.core.bucketing import BucketPlan, GradientBucketer
+from repro import compat
+from repro.comm import CommConfig, Communicator
+from repro.core.bucketing import BucketPlan
 from repro.core.overlap import AccumConfig, accumulate_and_reduce
-from repro.core.reducer import GradientReducer, ReduceConfig
+from repro.core.reducer import ReduceConfig
 from repro.models.model_api import Model
 from repro.models.parallel import ParallelCtx
 from repro.optim import (OptimConfig, adamw_flat_update, adamw_tree_update,
@@ -51,7 +57,8 @@ DP_MODES = ("replicated", "zero1", "fsdp")
 @dataclass(frozen=True)
 class TrainStepConfig:
     dp_mode: str = "replicated"
-    reduce: ReduceConfig = field(default_factory=ReduceConfig)
+    comm: CommConfig | None = None     # preferred: the Communicator config
+    reduce: ReduceConfig = field(default_factory=ReduceConfig)  # legacy
     optim: OptimConfig = field(default_factory=OptimConfig)
     accum: AccumConfig = field(default_factory=AccumConfig)
     causal_skip: bool = False
@@ -59,6 +66,12 @@ class TrainStepConfig:
     fsdp_bucket_bytes: int = 512 * 2**20
     fsdp_gather: str = "native"        # "native" (one all-gather op) | "ring"
                                        # (our unrolled schedule; hillclimb knob)
+
+    def comm_config(self, data_axes: tuple[str, ...]) -> CommConfig:
+        """The communicator config for this step: ``comm`` when given,
+        otherwise the legacy ``reduce`` policy mapped onto a transport."""
+        ccfg = self.comm if self.comm is not None else self.reduce.comm_config()
+        return replace(ccfg, data_axes=data_axes)
 
 
 # ---------------------------------------------------------------------------
@@ -86,10 +99,14 @@ def _flat_spec(mesh: Mesh) -> P:
     return P(tuple(mesh.axis_names))
 
 
-def build_reducer(model: Model, mesh: Mesh, cfg: TrainStepConfig) -> GradientReducer:
+def build_comm(mesh: Mesh, cfg: TrainStepConfig, *,
+               bucket_bytes: int | None = None) -> Communicator:
+    """The step's communicator over the mesh's data axes."""
     data_axes, _ = _mesh_axes(mesh)
-    rcfg = ReduceConfig(**{**cfg.reduce.__dict__, "data_axes": data_axes})
-    return GradientReducer(mesh, rcfg)
+    ccfg = cfg.comm_config(data_axes)
+    if bucket_bytes is not None:
+        ccfg = replace(ccfg, bucket_bytes=bucket_bytes)
+    return Communicator(mesh, ccfg)
 
 
 def _local_shapes(tree_abs, specs, mesh: Mesh):
@@ -119,8 +136,8 @@ def _slice_to_local(tree_full, specs):
             idx = jnp.zeros((), jnp.int32)
             p = 1
             for a in axes:
-                idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
-                p *= jax.lax.axis_size(a)
+                idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
+                p *= compat.axis_size(a)
             seg = leaf.shape[d] // p
             leaf = jax.lax.dynamic_slice_in_dim(leaf, idx * seg, seg, axis=d)
         return leaf
@@ -156,7 +173,7 @@ def _slice_like_shard(w: jax.Array, axes: tuple[str, ...]) -> jax.Array:
     the same ownership layout as hierarchical reduce-scatter (inner axis
     segments first)."""
     for ax in axes:
-        p = jax.lax.axis_size(ax)
+        p = compat.axis_size(ax)
         r = jax.lax.axis_index(ax)
         seg = w.shape[0] // p
         w = jax.lax.dynamic_slice_in_dim(w, r * seg, seg)
@@ -179,15 +196,14 @@ class FsdpPlan:
         self.gather_impl = cfg.fsdp_gather
         data_axes, _ = _mesh_axes(mesh)
         self.data_axes = data_axes
-        sizes = _sizes(mesh)
-        self.dp_world = 1
-        for a in data_axes:
-            self.dp_world *= sizes[a]
-        rcfg = cfg.reduce.ring_config()
-        pad = rcfg.flat_divisor([sizes[a] for a in data_axes])
-        self.ring_cfg = rcfg
-        self.bucketer = GradientBucketer(bucket_bytes=cfg.fsdp_bucket_bytes,
-                                         pad_multiple=pad)
+        self.comm = build_comm(mesh, cfg, bucket_bytes=cfg.fsdp_bucket_bytes)
+        if self.gather_impl == "ring" and not self.comm.spec.supports_rs:
+            raise ValueError(
+                f"fsdp_gather='ring' needs a transport with supports_rs; "
+                f"{self.comm.cfg.transport!r} has none — use fsdp_gather="
+                f"'native' or a ring transport")
+        self.dp_world = self.comm.world
+        self.bucketer = self.comm.bucketer
         self.pspecs = model.param_specs(mesh)
         local = _local_shapes(model.abstract_params(), self.pspecs, mesh)
         self.local_abs = local
@@ -203,7 +219,7 @@ class FsdpPlan:
         self.plans = {name: self.bucketer.plan(tree)
                       for name, tree in self.groups.items()}
         # static norm-accounting weights per group (model-replication aware)
-        msize = sizes.get("model", 1)
+        msize = _sizes(mesh).get("model", 1)
         self.norm_weights = {}
         for name in self.groups:
             spec_tree = self._group_of_tree(self.pspecs, name)
@@ -227,7 +243,7 @@ class FsdpPlan:
         out = []
         for b in buckets:
             for ax in reversed(self.data_axes):      # outermost segment first
-                p = jax.lax.axis_size(ax)
+                p = compat.axis_size(ax)
                 r = jax.lax.axis_index(ax)
                 seg = b.shape[0] // p
                 b = jax.lax.dynamic_slice_in_dim(b, r * seg, seg)
@@ -246,12 +262,8 @@ class FsdpPlan:
         for s in shards:
             if dtype is not None:
                 s = s.astype(dtype)
-            for ax in self.data_axes:                # pod first, data last
-                if self.gather_impl == "ring":
-                    s = ring_lib.ring_all_gather(s, ax, self.ring_cfg)
-                else:
-                    s = jax.lax.all_gather(s, ax, tiled=True)
-            full.append(s)
+            full.append(self.comm.gather_flat(
+                s, native=self.gather_impl != "ring"))
         return self.bucketer.debucketize(full, self.plans[name],
                                          cast_to=dtype)
 
@@ -308,10 +320,10 @@ def init_train_state(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                     "step": jnp.zeros((), jnp.int32)}
 
     elif cfg.dp_mode == "zero1":
-        reducer = build_reducer(model, mesh, cfg)
+        comm = build_comm(mesh, cfg)
         local = _local_shapes(model.abstract_params(), pspecs, mesh)
-        plan = reducer.bucketer.plan(local)
-        shard_sizes = [n // reducer.world for n in plan.bucket_sizes]
+        plan = comm.bucketer.plan(local)
+        shard_sizes = [n // comm.world for n in plan.bucket_sizes]
         specs = {"params": pspecs,
                  "opt": {"mu": [flat] * len(shard_sizes),
                          "nu": [flat] * len(shard_sizes)},
@@ -345,8 +357,8 @@ def init_train_state(model: Model, mesh: Mesh, cfg: TrainStepConfig,
     def mk_from_data(kd):
         return mk(jax.random.wrap_key_data(kd))
 
-    fn = jax.shard_map(mk_from_data, mesh=mesh, in_specs=P(),
-                       out_specs=specs, check_vma=False)
+    fn = compat.shard_map(mk_from_data, mesh=mesh, in_specs=P(),
+                          out_specs=specs, check_vma=False)
     if abstract:
         kd_abs = jax.eval_shape(jax.random.key_data, jax.random.key(0))
         return jax.eval_shape(fn, kd_abs), specs
@@ -371,11 +383,16 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
     metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
 
     if cfg.dp_mode in ("replicated", "zero1"):
-        reducer = build_reducer(model, mesh, cfg)
+        comm = build_comm(mesh, cfg)
         zero1_norm_weights = None
         if cfg.dp_mode == "zero1":
+            if not comm.spec.supports_rs:
+                raise ValueError(
+                    f"dp_mode='zero1' needs a transport with supports_rs; "
+                    f"{comm.cfg.transport!r} has none (registered ring "
+                    f"transports do)")
             local_abs = _local_shapes(model.abstract_params(), pspecs, mesh)
-            z1_plan = reducer.bucketer.plan(local_abs)
+            z1_plan = comm.bucketer.plan(local_abs)
             specs_flat = jax.tree_util.tree_flatten(
                 pspecs, is_leaf=lambda x: isinstance(x, P))[0]
             zero1_norm_weights = build_norm_weights(
@@ -393,7 +410,7 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
 
             if cfg.dp_mode == "replicated":
                 loss, grads = accumulate_and_reduce(
-                    grad_fn, lambda g: reducer.reduce_manual(g)[0],
+                    grad_fn, lambda g: comm.all_reduce_tree(g)[0],
                     state["params"], batch, cfg.accum)
                 gnorm = global_grad_norm(grads, pspecs, ctx)
                 factor = clip_factor(gnorm, cfg.optim.clip_norm)
@@ -407,10 +424,10 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
             else:  # zero1
                 loss, grads = accumulate_and_reduce(
                     grad_fn, lambda g: g, state["params"], batch, cfg.accum)
-                shards, plan = reducer.reduce_scatter_manual(grads)
+                shards, plan = comm.reduce_scatter_tree(grads)
                 # exact global norm over the *reduced* gradient: weight
                 # model-replicated fields by 1/model_size before the psum
-                ordered = reducer._ordered_axes()
+                ordered = comm.ordered_axes
                 sq = jnp.zeros((), jnp.float32)
                 for s, w in zip(shards, zero1_norm_weights):
                     wl = _slice_like_shard(jnp.asarray(w), ordered)
@@ -422,7 +439,7 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                 deltas, new_opt = adamw_flat_update(shards, state["opt"],
                                                     state["step"], lr,
                                                     cfg.optim)
-                delta_tree = reducer.all_gather_manual(deltas, plan)
+                delta_tree = comm.all_gather_buckets(deltas, plan)
                 wd = 1 - lr * cfg.optim.weight_decay
                 new_p = jax.tree.map(
                     lambda p, d: (p.astype(jnp.float32) * wd
@@ -484,8 +501,8 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                        "lr": lr}
             return new_state, metrics
 
-    sharded = jax.shard_map(step_fn, mesh=mesh,
-                            in_specs=(state_specs, batch_pspecs),
-                            out_specs=(state_specs, metric_specs),
-                            check_vma=False)
+    sharded = compat.shard_map(step_fn, mesh=mesh,
+                               in_specs=(state_specs, batch_pspecs),
+                               out_specs=(state_specs, metric_specs),
+                               check_vma=False)
     return jax.jit(sharded, donate_argnums=(0,) if donate else ())

@@ -7,17 +7,18 @@ from conftest import run_distributed
 
 RING_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core import ring
 from repro.core.ring import RingConfig
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(AxisType.Auto,)*2)
+mesh = compat.make_mesh((2, 4), ("pod", "data"))
 L = 2*4*2*4*512*2
 x = np.random.RandomState(0).randn(8, L).astype(np.float32)
 want = x.sum(0)
 
 def run(fn, cfg, axes):
-    g = jax.jit(jax.shard_map(lambda xl: fn(xl.reshape(-1), axes, cfg),
+    g = jax.jit(compat.shard_map(lambda xl: fn(xl.reshape(-1), axes, cfg),
         mesh=mesh, in_specs=P(("pod","data")), out_specs=P(), check_vma=False))
     return np.asarray(g(x.reshape(-1)))
 
@@ -41,7 +42,7 @@ cfg = RingConfig(chunks=2, bidirectional=True)
 def rsag(xl):
     s = ring.ring_reduce_scatter(xl.reshape(-1), "data", cfg)
     return ring.ring_all_gather(s, "data", cfg)
-g = jax.jit(jax.shard_map(rsag, mesh=mesh, in_specs=P(("pod","data")),
+g = jax.jit(compat.shard_map(rsag, mesh=mesh, in_specs=P(("pod","data")),
     out_specs=P(("pod","data")), check_vma=False))
 out = np.asarray(g(x.reshape(-1))).reshape(2, 4, L)
 per_pod = x.reshape(2,4,L).sum(1)
@@ -53,10 +54,11 @@ print("RING_OK")
 
 REDUCER_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro import compat
 from repro.core.reducer import GradientReducer, ReduceConfig
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(AxisType.Auto,)*3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 rng = np.random.RandomState(1)
 grads = {"w": jnp.asarray(rng.randn(16, 256).astype(np.float32)),
          "b": jnp.asarray(rng.randn(256).astype(np.float32)),
@@ -72,8 +74,8 @@ for policy in ["fused_ring_hierarchical", "fused_ring", "native_psum",
     def mk(x):
         i = jax.lax.axis_index("pod")*2 + jax.lax.axis_index("data")
         return jax.tree.map(lambda t: t*(1.0+i), x)
-    gv = jax.jit(jax.shard_map(mk, mesh=mesh, in_specs=(specs,), out_specs=specs,
-                               check_vma=False))(grads)
+    gv = jax.jit(compat.shard_map(mk, mesh=mesh, in_specs=(specs,),
+                                  out_specs=specs, check_vma=False))(grads)
     out = jax.jit(lambda g: red.reduce(g, specs)[0])(gv)
     scale = np.mean([1.0+i for i in range(4)])
     for k in grads:
@@ -84,17 +86,18 @@ print("REDUCER_OK")
 
 HALO_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core.halo import HaloSpec, halo_exchange
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 Y = jnp.arange(64, dtype=jnp.float32).reshape(64, 1)
 for sched in ["concurrent", "sequential", "chunked"]:
     def hx(xl, s=sched):
         h = halo_exchange(xl, [HaloSpec("data", 0)], schedule=s, chunks=1)
         return jnp.concatenate([h[("data","-")], xl, h[("data","+")]], 0)
-    g = jax.jit(jax.shard_map(hx, mesh=mesh, in_specs=P("data"),
-                              out_specs=P("data"), check_vma=False))
+    g = jax.jit(compat.shard_map(hx, mesh=mesh, in_specs=P("data"),
+                                 out_specs=P("data"), check_vma=False))
     out = np.asarray(g(Y)).reshape(8, 10)
     ys = np.asarray(Y).reshape(8, 8)
     for r in range(8):
@@ -105,7 +108,8 @@ print("HALO_OK")
 
 DPMODES_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.configs import reduced_config
 from repro.models import build_model
 from repro.runtime.train_step import TrainStepConfig, build_train_step, init_train_state
@@ -114,7 +118,7 @@ from repro.core.overlap import AccumConfig
 from repro.optim import adamw_tree_update, init_opt_state, OptimConfig, make_schedule
 from repro.optim.adamw import clip_factor
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(AxisType.Auto,)*3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = reduced_config("llama3.2-1b")
 m = build_model(cfg)
 B, S = 8, 32
@@ -160,13 +164,14 @@ print("DPMODES_OK")
 
 SERVE_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro import compat
 from repro.configs import reduced_config, base
 from repro.models import build_model
 from repro.runtime.serve_step import build_decode_step, build_prefill
 from repro.sharding import shardings_of
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 cfg = reduced_config("llama3.2-1b")
 m = build_model(cfg)
 params = m.init(jax.random.key(0))

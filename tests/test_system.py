@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType
 
+from repro import compat
 from repro.configs import reduced_config
 from repro.core.overlap import AccumConfig
 from repro.core.reducer import ReduceConfig
@@ -17,8 +17,8 @@ from repro.runtime.train_step import TrainStepConfig
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    # feature-detects AxisType / axis_types support for the installed jax
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def _setup(tmp_path, steps=24, ckpt_every=8):
