@@ -14,13 +14,16 @@ import sys
 import time
 
 from benchmarks import bench_allreduce, bench_halo, bench_overhead, \
-    bench_stencil
+    bench_overlap, bench_stencil
 
 SECTIONS = [
     ("fig1_2_5_allreduce", bench_allreduce.run,
      "Figs 1/2/5: reduction time & bandwidth vs vector length"),
     ("fig3_4_overhead", bench_overhead.run,
      "Figs 3/4: non-comm overhead and %time in communication"),
+    ("tab_overlap_sgd", bench_overlap.run,
+     "Seq vs Concurrent vs Threaded, for gradient reduction: "
+     "schedule policy x channels"),
     ("tab1_3_halo", bench_halo.run,
      "Tables I-III: halo exchange schedules"),
     ("tab5_6_stencil", bench_stencil.run,

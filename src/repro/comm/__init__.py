@@ -18,10 +18,13 @@ from repro.comm.plan import ChannelAssignment, CommPlan, assign_channels
 from repro.comm.registry import (Transport, TransportSpec, get_transport,
                                  list_transports, register_transport,
                                  transport_specs)
+from repro.comm.schedule import (CommSchedule, IssueSlot, SCHEDULE_POLICIES,
+                                 build_schedule)
 
 __all__ = [
-    "ChannelAssignment", "CommConfig", "CommPlan", "Communicator",
-    "POLICY_TO_TRANSPORT", "Transport", "TransportSpec", "assign_channels",
+    "ChannelAssignment", "CommConfig", "CommPlan", "CommSchedule",
+    "Communicator", "IssueSlot", "POLICY_TO_TRANSPORT", "SCHEDULE_POLICIES",
+    "Transport", "TransportSpec", "assign_channels", "build_schedule",
     "comm_config_from_policy", "get_transport", "list_transports",
     "register_transport", "transport_specs",
 ]

@@ -31,12 +31,14 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.comm.plan import ChannelAssignment, CommPlan, assign_channels
 from repro.comm.registry import Transport, get_transport
+from repro.comm.schedule import CommSchedule, build_schedule
 from repro.core.bucketing import BucketPlan, GradientBucketer
 from repro.core.compression import ErrorFeedback
 from repro.core.halo import HaloSpec, halo_exchange as _halo_exchange
@@ -249,6 +251,140 @@ class Communicator:
         debucketized tree when ``bplan`` is given."""
         full = self.all_gather(shards)
         return full if bplan is None else self.bucketer.debucketize(full, bplan)
+
+    # -- dependency-aware scheduled reduction --------------------------------
+
+    def schedule(self, tree, policy: str, microbatches: int = 1
+                 ) -> CommSchedule:
+        """The :class:`~repro.comm.schedule.CommSchedule` this communicator
+        would execute for one gradient-shaped pytree: bucket layout from the
+        bucketer, striping from ``cfg.channels``, issue order from
+        ``policy``."""
+        if not self.cfg.fuse:
+            # per-tensor collectives: every leaf is its own "bucket"
+            sizes = [int(np.prod(l.shape)) if l.shape else 1
+                     for l in jax.tree.leaves(tree)]
+            return build_schedule(policy, sizes, microbatches=microbatches,
+                                  channels=self.cfg.channels)
+        bplan = self.bucketer.plan(tree)
+        return build_schedule(policy, bplan.bucket_sizes,
+                              microbatches=microbatches,
+                              channels=self.cfg.channels)
+
+    def reduce_scheduled(self, grad_fn, params, batch,
+                         schedule: CommSchedule, *, op: str = "all_reduce"):
+        """Run ``grad_fn(params, microbatch) -> (loss, grads)`` over
+        ``schedule.microbatches`` slices of ``batch`` (split on the leading
+        axis), issuing each gradient bucket's collective at its schedule
+        slot.  Runs *inside* a fully-manual ``shard_map``.
+
+        ``op`` selects the per-bucket collective:
+
+        * ``"all_reduce"``     -> returns ``(mean_loss, reduced_tree)``;
+        * ``"reduce_scatter"`` -> ``(mean_loss, (shards, bucket_plan))`` —
+          each microbatch's buckets reduce-scatter as they are produced
+          (streamed ZeRO), shards accumulate locally;
+        * ``"none"``           -> ``(mean_loss, accumulated_tree)`` for
+          modes whose reduction rides the autodiff transpose (FSDP); the
+          schedule then only describes the intrinsic overlap.
+
+        Buckets sharing a rail (``schedule.channels >= 1``) are chained with
+        :func:`~repro.core.topology.order_token` so each rail issues FIFO in
+        readiness order; rails stay independent.  ``channels == 0`` leaves
+        every collective unconstrained.
+        """
+        if op not in ("all_reduce", "reduce_scatter", "none"):
+            raise ValueError(f"op must be all_reduce|reduce_scatter|none, "
+                             f"got {op!r}")
+        if op == "reduce_scatter" and not self.spec.supports_rs:
+            raise ValueError(
+                f"transport {self.cfg.transport!r} does not support "
+                f"reduce-scatter (supports_rs=False)")
+        if not self.axes:
+            if op == "reduce_scatter":
+                # downgrading would change the return shape from
+                # (shards, plan) to a tree under the caller's feet
+                raise ValueError(
+                    "reduce_scatter schedule needs data axes; this "
+                    "communicator's mesh has none")
+            op = "none"                      # no data axes: nothing to reduce
+        m = max(schedule.microbatches, 1)
+        collective = (self.transport.all_reduce if op == "all_reduce"
+                      else self.transport.reduce_scatter)
+
+        micro = (jax.tree.map(
+            lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch)
+            if m > 1 else None)
+        inv = 1.0 / m
+        deps: dict[int, jax.Array] = {}      # rail -> FIFO ordering token
+        chained = schedule.channels >= 1
+
+        def issue(bucket, channel):
+            if not chained:
+                return collective(bucket)
+            y = collective(order_token(deps.get(channel), bucket))
+            deps[channel] = y.reshape(-1)[0]
+            return y
+
+        streamed = schedule.policy != "accumulate_then_reduce"
+        fused = self.cfg.fuse
+        losses = []
+        acc = None                           # tree (op=none) or bucket list
+        bplan: BucketPlan | None = None
+        treedef = None                       # unfused (per-tensor) layout
+        for i in range(m):
+            mb = batch if m == 1 else jax.tree.map(lambda x: x[i], micro)
+            loss, grads = grad_fn(params, mb)
+            losses.append(loss)
+            if op == "none":
+                if m > 1:
+                    grads = jax.tree.map(
+                        lambda g: g.astype(jnp.float32) * inv, grads)
+                acc = (grads if acc is None
+                       else jax.tree.map(jnp.add, acc, grads))
+                continue
+            if fused:
+                buckets, bplan = self.bucketer.bucketize(grads)
+                n_units = bplan.n_buckets
+            else:                            # per-tensor: leaf == "bucket"
+                buckets, treedef = jax.tree.flatten(grads)
+                n_units = len(buckets)
+            if n_units != schedule.n_buckets:
+                raise ValueError(
+                    f"schedule has {schedule.n_buckets} buckets but the "
+                    f"gradient tree bucketizes into {n_units}; build "
+                    f"the schedule with Communicator.schedule on the same "
+                    f"tree")
+            if m > 1:
+                buckets = [b.astype(jnp.float32) * inv for b in buckets]
+            if streamed:
+                out: list = [None] * len(buckets)
+                for slot in schedule.slots_for_phase(i):
+                    for b in slot.bucket_ids:
+                        out[b] = issue(buckets[b], slot.channel)
+                acc = out if acc is None else [a + o for a, o in zip(acc, out)]
+            else:
+                acc = (buckets if acc is None
+                       else [a + b for a, b in zip(acc, buckets)])
+        if op != "none" and not streamed:
+            out = [None] * len(acc)
+            for slot in schedule.slots_for_phase(m - 1):
+                for b in slot.bucket_ids:
+                    out[b] = issue(acc[b], slot.channel)
+            acc = out
+        loss = losses[0] if m == 1 else jnp.mean(jnp.stack(losses))
+        if op == "none":
+            return loss, acc
+        if not fused:                        # per-tensor mean, dtype-stable
+            if self.cfg.mean:
+                winv = 1.0 / self.world
+                acc = [(a.astype(jnp.float32) * winv).astype(a.dtype)
+                       for a in acc]
+            return loss, jax.tree.unflatten(treedef, acc)
+        acc = self._mean_buckets(acc)
+        if op == "reduce_scatter":
+            return loss, (acc, bplan)
+        return loss, self.bucketer.debucketize(acc, bplan)
 
     # -- SPMD wrappers (called OUTSIDE shard_map) ----------------------------
 

@@ -1,0 +1,219 @@
+"""CommSchedule: dependency-aware issue order for streamed bucket reduction.
+
+The paper's headline speedup comes from keeping communication *in flight
+while compute proceeds* — multiple PSM2 endpoints progressing concurrently
+with the compute threads.  A :class:`CommSchedule` makes that structure an
+explicit object instead of two string policies: an ordered list of
+:class:`IssueSlot`\\ s, each saying *which buckets* go out *on which virtual
+channel* after *which phase* of the step's compute, derived from
+backward-pass readiness order (the last layer's gradients are ready first).
+
+Three schedule families (``SCHEDULE_POLICIES``):
+
+* ``accumulate_then_reduce`` — every bucket issues in the final phase, after
+  all microbatch compute (comm-minimal; zero overlap — the reduction
+  serialises after the last microbatch).
+* ``stream`` — each microbatch's buckets issue as soon as that microbatch's
+  backward finishes; microbatch ``i``'s collectives have no data dependency
+  on microbatch ``i+1``'s compute, so the scheduler overlaps them.
+* ``scheduled`` — like ``stream``, but within each phase buckets issue in
+  *readiness order* (highest bucket index — the last layers' gradients —
+  first), striped across the virtual channels with per-rail FIFO order.
+  This matches when gradients actually materialise during backward, so even
+  the final microbatch's early buckets overlap with its remaining backward
+  compute.
+
+Every slot records ``ready`` — the fraction of the step's (backward)
+compute completed when the slot becomes issuable.  From that the schedule
+derives :attr:`CommSchedule.overlap_fraction`, the napkin-math share of
+collective traffic that can hide under remaining compute:
+
+    overlap_fraction = sum_slots (w_slot / W) * (1 - ready_slot)
+
+which :mod:`repro.launch.roofline` turns into
+``t_exposed_collective = max(0, t_collective - overlap_fraction * t_compute)``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.comm.plan import assign_channels
+
+SCHEDULE_POLICIES = ("accumulate_then_reduce", "stream", "scheduled")
+
+
+@dataclass(frozen=True)
+class IssueSlot:
+    """One issue of one bucket's collective on one virtual channel.
+
+    ``phase`` is the microbatch index after whose backward the slot becomes
+    issuable; ``ready`` refines that to a fraction of the *whole step's*
+    compute (``scheduled`` sub-divides a phase by bucket readiness).
+    """
+
+    phase: int
+    bucket_ids: tuple[int, ...]
+    channel: int
+    ready: float
+
+    @property
+    def exposed(self) -> float:
+        """Fraction of step compute with nothing left to hide this slot."""
+        return max(0.0, min(1.0, self.ready))
+
+
+@dataclass(frozen=True)
+class CommSchedule:
+    """Explicit issue order for one gradient reduction.
+
+    ``channels == 0`` means the striping is unconstrained: every bucket is
+    its own independent collective and executors must not chain issues
+    (XLA's latency-hiding scheduler gets a free hand).  ``channels >= 1``
+    means exactly that many guaranteed rails; each rail issues its slots in
+    FIFO order (the executor threads an ordering token through them).
+    """
+
+    policy: str
+    microbatches: int
+    bucket_sizes: tuple[int, ...]
+    channels: int                      # the *config knob* (0 = unconstrained)
+    slots: tuple[IssueSlot, ...]
+
+    # -- shape ---------------------------------------------------------------
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.bucket_sizes)
+
+    @property
+    def n_channels(self) -> int:
+        return len({s.channel for s in self.slots}) if self.slots else 0
+
+    @property
+    def n_collectives(self) -> int:
+        return sum(len(s.bucket_ids) for s in self.slots)
+
+    def slots_for_phase(self, phase: int) -> tuple[IssueSlot, ...]:
+        """This phase's slots, in issue order (readiness, then channel)."""
+        return tuple(s for s in self.slots if s.phase == phase)
+
+    # -- prediction ----------------------------------------------------------
+
+    @property
+    def total_weight(self) -> float:
+        return float(sum(sum(self.bucket_sizes[b] for b in s.bucket_ids)
+                         for s in self.slots))
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Weighted share of collective traffic issued while compute remains
+        (0.0 = fully serialised after compute, -> 1.0 = fully hidden)."""
+        w_total = self.total_weight
+        if w_total <= 0.0:
+            return 0.0
+        acc = 0.0
+        for s in self.slots:
+            w = sum(self.bucket_sizes[b] for b in s.bucket_ids)
+            acc += w * (1.0 - s.exposed)
+        return acc / w_total
+
+    def describe(self, max_slots: int = 128) -> dict:
+        """JSON-friendly summary for the dry-run report.  Slot-by-slot
+        detail is elided past ``max_slots`` (FSDP schedules can carry
+        thousands of per-layer-group slots)."""
+        out = {
+            "policy": self.policy,
+            "microbatches": self.microbatches,
+            "n_buckets": self.n_buckets,
+            "channels": self.channels,
+            "n_collectives": self.n_collectives,
+            "overlap_fraction": self.overlap_fraction,
+        }
+        if len(self.slots) <= max_slots:
+            out["slots"] = [{"phase": s.phase, "buckets": list(s.bucket_ids),
+                             "channel": s.channel, "ready": round(s.ready, 6)}
+                            for s in self.slots]
+        else:
+            out["slots_elided"] = len(self.slots)
+        return out
+
+    def validate(self) -> None:
+        """Structural invariants every executor relies on."""
+        expected_phases = (range(self.microbatches)
+                           if self.policy != "accumulate_then_reduce"
+                           else (self.microbatches - 1,))
+        for phase in expected_phases:
+            seen = sorted(b for s in self.slots_for_phase(phase)
+                          for b in s.bucket_ids)
+            if seen != list(range(self.n_buckets)):
+                raise ValueError(
+                    f"schedule {self.policy!r} phase {phase}: buckets {seen} "
+                    f"!= 0..{self.n_buckets - 1}")
+        # rails issue FIFO: readiness must be non-decreasing per channel
+        by_channel: dict[int, float] = {}
+        for s in self.slots:
+            prev = by_channel.get(s.channel, -1.0)
+            if s.ready < prev - 1e-9:
+                raise ValueError(
+                    f"channel {s.channel} readiness not monotone: "
+                    f"{s.ready} after {prev}")
+            by_channel[s.channel] = s.ready
+
+
+def _bucket_channels(bucket_sizes: Sequence[int], channels: int) -> list[int]:
+    """bucket index -> channel id under the communicator's striping rule
+    (``channels == 0``: one private channel per bucket)."""
+    n = channels if channels >= 1 else max(len(bucket_sizes), 1)
+    chan_of = [0] * len(bucket_sizes)
+    for a in assign_channels(bucket_sizes, n):
+        for b in a.buckets:
+            chan_of[b] = a.channel
+    return chan_of
+
+
+def build_schedule(policy: str, bucket_sizes: Sequence[int],
+                   microbatches: int = 1, channels: int = 0) -> CommSchedule:
+    """Derive the issue slots for ``policy`` from the bucket layout.
+
+    Readiness model: the step's compute divides evenly across
+    ``microbatches`` phases; within a phase, bucket ``b`` of ``B`` becomes
+    ready after the fraction of that phase's backward that produced it.
+    Buckets are packed in parameter (layer) order, and backward runs last
+    layer first — so bucket ``B-1`` is ready first and bucket ``0`` last.
+    """
+    if policy not in SCHEDULE_POLICIES:
+        raise ValueError(f"unknown schedule policy {policy!r}; one of "
+                         f"{SCHEDULE_POLICIES}")
+    m = max(int(microbatches), 1)
+    sizes = tuple(int(s) for s in bucket_sizes)
+    B = len(sizes)
+    chan_of = _bucket_channels(sizes, channels)
+    slots: list[IssueSlot] = []
+
+    if policy == "accumulate_then_reduce":
+        # everything issues after the last phase's compute: ready == 1.0
+        for b in range(B):
+            slots.append(IssueSlot(phase=m - 1, bucket_ids=(b,),
+                                   channel=chan_of[b], ready=1.0))
+    elif policy == "stream":
+        # per microbatch, all buckets issue after that phase's backward
+        for i in range(m):
+            ready = (i + 1) / m
+            for b in range(B):
+                slots.append(IssueSlot(phase=i, bucket_ids=(b,),
+                                       channel=chan_of[b], ready=ready))
+    else:  # scheduled: readiness order within each phase, last layers first
+        total = float(sum(sizes)) or 1.0
+        for i in range(m):
+            done = 0.0
+            for b in reversed(range(B)):         # bucket B-1 ready first
+                done += sizes[b]
+                ready = (i + done / total) / m
+                slots.append(IssueSlot(phase=i, bucket_ids=(b,),
+                                       channel=chan_of[b], ready=ready))
+    sched = CommSchedule(policy=policy, microbatches=m, bucket_sizes=sizes,
+                         channels=int(channels), slots=tuple(slots))
+    sched.validate()
+    return sched

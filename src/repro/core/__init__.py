@@ -16,7 +16,8 @@ transports are made of:
 * :mod:`repro.core.halo`        — Cartesian halo exchange (QCD workload);
   reachable as ``Communicator.halo_exchange``.
 * :mod:`repro.core.compression` — wire codecs + error feedback.
-* :mod:`repro.core.overlap`     — gradient-accumulation overlap policies.
+* :mod:`repro.core.overlap`     — DEPRECATED accumulation-policy shim; the
+  policies are canned :mod:`repro.comm.schedule` CommSchedules now.
 * :mod:`repro.core.reducer`     — DEPRECATED ``GradientReducer`` shim kept
   for legacy string-policy call sites; delegates to ``repro.comm``.
 

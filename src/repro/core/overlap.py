@@ -1,47 +1,83 @@
-"""Compute/communication overlap policies for gradient accumulation.
+"""DEPRECATED compute/communication overlap shim.
 
-The paper devotes cores to *progressing communication concurrently with
-compute*.  In XLA the latency-hiding scheduler overlaps async collectives
-with independent compute automatically — our job is to *structure the step*
-so independence exists:
+The two string policies that used to live here are now *canned schedules*
+in :mod:`repro.comm.schedule`: a :class:`~repro.comm.schedule.CommSchedule`
+is an explicit ordered list of ``(phase, bucket_ids, channel)`` issue slots
+derived from backward-pass readiness order, and
+:meth:`repro.comm.Communicator.reduce_scheduled` executes it with per-rail
+FIFO ordering.  The train step builds its schedule from
+``TrainStepConfig.schedule`` (falling back to ``AccumConfig.policy``).
 
-* ``accumulate_then_reduce`` — sum microbatch gradients locally, reduce once
-  (comm-minimal; reduction serialises after the last microbatch).
-* ``stream`` — reduce each microbatch's buckets as they are produced; the
-  reduction of microbatch ``i`` has no data dependency on the compute of
-  microbatch ``i+1``, so the scheduler overlaps them (the paper's comm
-  threads running while compute proceeds).  Same math (mean of means).
+Kept here for backward compatibility:
 
-Microbatch loops are unrolled python loops so the HLO exposes the
-independent collectives (and so dry-run cost analysis counts every step).
+* :class:`AccumConfig` — microbatch count + legacy policy name; consumed by
+  ``TrainStepConfig`` and mapped onto a canned schedule via
+  :func:`canned_schedule`.
+* :func:`accumulate_and_reduce` — the old tree-granularity executor, now a
+  deprecated wrapper over the same phase structure (no bucket-level issue
+  order; use ``Communicator.reduce_scheduled`` for that).
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
-from typing import Callable
+from typing import Callable, Sequence, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
 
+if TYPE_CHECKING:  # import cycle (comm.plan -> core package -> here)
+    from repro.comm.schedule import CommSchedule
+
+# legacy names (pre-schedule); "scheduled" is accepted everywhere a policy
+# string is, but was never a POLICIES member
 POLICIES = ("accumulate_then_reduce", "stream")
 
 
 @dataclass(frozen=True)
 class AccumConfig:
+    """DEPRECATED: microbatching knob kept for config compatibility.
+
+    ``policy`` accepts any :data:`~repro.comm.schedule.SCHEDULE_POLICIES`
+    member; prefer setting ``TrainStepConfig.schedule`` in new code.
+    """
+
     microbatches: int = 1
     policy: str = "accumulate_then_reduce"
 
 
+def canned_schedule(cfg: AccumConfig, bucket_sizes: Sequence[int],
+                    channels: int = 0) -> "CommSchedule":
+    """Map a legacy :class:`AccumConfig` onto the schedule it always meant:
+    ``accumulate_then_reduce`` -> one final-phase issue of every bucket,
+    ``stream`` -> per-microbatch issues, ``scheduled`` passes through."""
+    from repro.comm.schedule import SCHEDULE_POLICIES, build_schedule
+
+    if cfg.policy not in SCHEDULE_POLICIES:
+        raise ValueError(f"unknown accumulation policy {cfg.policy!r}; one "
+                         f"of {SCHEDULE_POLICIES}")
+    return build_schedule(cfg.policy, bucket_sizes,
+                          microbatches=cfg.microbatches, channels=channels)
+
+
 def accumulate_and_reduce(grad_fn: Callable, reduce_fn: Callable, params,
                           batch, cfg: AccumConfig):
-    """Run ``grad_fn(params, microbatch) -> (loss, grads)`` over ``cfg.microbatches``
-    slices of ``batch`` (split on the leading axis), combining with the policy.
+    """DEPRECATED: run ``grad_fn(params, microbatch) -> (loss, grads)`` over
+    ``cfg.microbatches`` slices of ``batch``, combining with the policy at
+    *tree* granularity (``reduce_fn(grads) -> grads`` is the cross-device
+    mean).  Returns ``(mean_loss, reduced_grads)``.
 
-    ``reduce_fn(grads) -> grads`` performs the cross-device mean.
-    Returns ``(mean_loss, reduced_grads)``.
+    Use :meth:`repro.comm.Communicator.reduce_scheduled` instead — it issues
+    per-*bucket* collectives in readiness order on striped rails; this
+    wrapper survives only for callers holding a bare ``reduce_fn``.
     """
-    if cfg.policy not in POLICIES:
+    from repro.comm.schedule import SCHEDULE_POLICIES
+
+    warnings.warn(
+        "accumulate_and_reduce is deprecated; build a CommSchedule and call "
+        "Communicator.reduce_scheduled", DeprecationWarning, stacklevel=2)
+    if cfg.policy not in SCHEDULE_POLICIES:
         raise ValueError(f"unknown accumulation policy {cfg.policy!r}")
     m = cfg.microbatches
     if m <= 1:
@@ -51,24 +87,16 @@ def accumulate_and_reduce(grad_fn: Callable, reduce_fn: Callable, params,
     micro = jax.tree.map(lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]),
                          batch)
     inv = 1.0 / m
+    streamed = cfg.policy != "accumulate_then_reduce"
     losses = []
-    if cfg.policy == "accumulate_then_reduce":
-        acc = None
-        for i in range(m):
-            mb = jax.tree.map(lambda x: x[i], micro)
-            loss, grads = grad_fn(params, mb)
-            losses.append(loss)
-            grads = jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)
-            acc = grads if acc is None else jax.tree.map(jnp.add, acc, grads)
-        reduced = reduce_fn(acc)
-    else:  # stream: one reduction per microbatch, all independent
-        acc = None
-        for i in range(m):
-            mb = jax.tree.map(lambda x: x[i], micro)
-            loss, grads = grad_fn(params, mb)
-            losses.append(loss)
-            grads = jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)
-            red = reduce_fn(grads)
-            acc = red if acc is None else jax.tree.map(jnp.add, acc, red)
-        reduced = acc
+    acc = None
+    for i in range(m):
+        mb = jax.tree.map(lambda x: x[i], micro)
+        loss, grads = grad_fn(params, mb)
+        losses.append(loss)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)
+        if streamed:        # one reduction per microbatch, all independent
+            grads = reduce_fn(grads)
+        acc = grads if acc is None else jax.tree.map(jnp.add, acc, grads)
+    reduced = acc if streamed else reduce_fn(acc)
     return jnp.mean(jnp.stack(losses)), reduced

@@ -28,7 +28,7 @@ from dataclasses import replace
 import jax
 import jax.numpy as jnp
 
-from repro.comm import POLICY_TO_TRANSPORT
+from repro.comm import POLICY_TO_TRANSPORT, SCHEDULE_POLICIES
 from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
 from repro.core.overlap import AccumConfig
 from repro.data import make_batch_specs
@@ -38,8 +38,8 @@ from repro.launch.roofline import (Roofline, collective_wire_bytes,
 from repro.launch.settings import settings_for
 from repro.models import build_model
 from repro.runtime.serve_step import build_decode_step, build_prefill
-from repro.runtime.train_step import (TrainStepConfig, build_train_step,
-                                      init_train_state)
+from repro.runtime.train_step import (TrainStepConfig, build_step_schedule,
+                                      build_train_step, init_train_state)
 
 HBM_PER_CHIP = 16 * 2**30
 
@@ -49,6 +49,13 @@ def _abstract_batch(model, shape_cfg):
 
 
 def make_step_config(arch: str, overrides: dict | None = None) -> TrainStepConfig:
+    """Per-arch step config with override plumbing.
+
+    The accumulation *policy* is no longer hardcoded: ``accum_policy``
+    overrides the legacy field, and a new-style ``schedule`` key (any
+    :data:`~repro.comm.SCHEDULE_POLICIES` member) sets
+    ``TrainStepConfig.schedule`` directly, taking precedence.
+    """
     st = settings_for(arch)
     ccfg = st.comm_config()
     kw = dict(dp_mode=st.dp_mode,
@@ -180,7 +187,8 @@ def _model_size(mesh) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
 
 
-def analyse(lowered, n_dev: int, model, shape_cfg) -> dict:
+def analyse(lowered, n_dev: int, model, shape_cfg,
+            overlap_fraction: float = 0.0) -> dict:
     t0 = time.time()
     compiled = lowered.compile()
     compile_s = time.time() - t0
@@ -200,6 +208,7 @@ def analyse(lowered, n_dev: int, model, shape_cfg) -> dict:
         hbm_bytes_per_device=float(ca.get("bytes accessed", 0.0)),
         wire_bytes_per_device=stats.wire_bytes,
         model_flops=mf,
+        overlap_fraction=overlap_fraction,
     )
     mem = {
         "argument_gb": ma.argument_size_in_bytes / 2**30,
@@ -228,12 +237,20 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              overrides: dict | None = None) -> dict:
     lowered, n_dev, model, shape_cfg = lower_cell(arch, shape_name, multi_pod,
                                                   overrides)
-    out = analyse(lowered, n_dev, model, shape_cfg)
+    sched = None
     if shape_cfg.kind == "train":
+        # the issue schedule the step executes: its overlap fraction makes
+        # the roofline honest about compute/comm overlap
         mesh = make_production_mesh(multi_pod=multi_pod)
+        tcfg = make_step_config(arch, overrides)
         with mesh:
-            out["comm_plan"] = comm_plan_summary(
-                model, mesh, make_step_config(arch, overrides))
+            sched = build_step_schedule(model, mesh, tcfg)
+    out = analyse(lowered, n_dev, model, shape_cfg,
+                  overlap_fraction=sched.overlap_fraction if sched else 0.0)
+    if shape_cfg.kind == "train":
+        with mesh:
+            out["comm_plan"] = comm_plan_summary(model, mesh, tcfg)
+        out["schedule"] = sched.describe()
     out.update({"arch": arch, "shape": shape_name,
                 "mesh": "2x16x16" if multi_pod else "16x16",
                 "devices": n_dev})
@@ -253,6 +270,11 @@ def main() -> None:
                          "default of 1 keeps unrolled-HLO compile times "
                          "tractable on this 1-core container (roofline "
                          "FLOP/byte/wire terms are accumulation-invariant)")
+    ap.add_argument("--accum-policy", default="accumulate_then_reduce",
+                    choices=SCHEDULE_POLICIES,
+                    help="issue schedule for the gradient reduction "
+                         "(stream/scheduled overlap comm with backward "
+                         "compute; reflected in t_exposed_collective)")
     args = ap.parse_args()
 
     archs = list_archs() if args.arch == "all" else args.arch.split(",")
@@ -283,7 +305,9 @@ def main() -> None:
                 try:
                     rec = run_cell(arch, shape_name, multi,
                                    overrides={"accum_microbatches":
-                                              args.microbatches})
+                                              args.microbatches,
+                                              "accum_policy":
+                                              args.accum_policy})
                     rec["tag"] = args.tag
                     cache[key] = rec
                     r = rec["roofline"]
@@ -291,6 +315,8 @@ def main() -> None:
                           f"bottleneck={r['bottleneck']} "
                           f"Tc={r['t_compute_s']:.4f}s Tm={r['t_memory_s']:.4f}s "
                           f"Tx={r['t_collective_s']:.4f}s "
+                          f"Tx_exposed={r['t_exposed_collective_s']:.4f}s "
+                          f"overlap={r['overlap_fraction']:.2f} "
                           f"live={rec['memory']['live_gb']:.2f}GB "
                           f"fits={rec['memory']['fits_16gb']}", flush=True)
                 except Exception as e:

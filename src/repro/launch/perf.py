@@ -9,7 +9,8 @@ tag in the shared dry-run JSON so report.py can diff baseline vs variants.
 
 Override keys: comm_transport, comm_channels, comm_chunks,
 comm_bidirectional, comm_wire_dtype, comm_bucket_bytes (any CommConfig
-field as comm_<field>), accum_microbatches, accum_policy, causal_skip,
+field as comm_<field>), accum_microbatches, accum_policy, schedule
+(stream/scheduled issue order -> roofline overlap), causal_skip,
 serve_weights, fsdp_gather, gather_dtype, fsdp_bucket_bytes.  Legacy
 reduce_<field> keys still work; reduce_policy maps through the
 repro.comm transport registry.

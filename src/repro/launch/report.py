@@ -31,31 +31,37 @@ def roofline_table(cache: dict, tag: str = "baseline",
                    mesh: str = "single") -> str:
     rows = []
     header = ("| arch | shape | T_compute | T_memory | T_collective | "
-              "bottleneck | compute-frac | useful-FLOPs | wire/dev | live GB |")
-    sep = "|" + "---|" * 10
+              "T_exposed | bottleneck | compute-frac | useful-FLOPs | "
+              "wire/dev | live GB |")
+    sep = "|" + "---|" * 11
     rows.append(header)
     rows.append(sep)
     for arch in list_archs():
         cfg = get_config(arch)
         for shape in ["train_4k", "prefill_32k", "decode_32k", "long_500k"]:
             if shape not in applicable_shapes(cfg):
-                rows.append(f"| {arch} | {shape} | — | — | — | "
+                rows.append(f"| {arch} | {shape} | — | — | — | — | "
                             f"skipped (full attention; DESIGN.md) | — | — | — | — |")
                 continue
             key = f"{tag}|{arch}|{shape}|{mesh}"
             rec = cache.get(key)
             if rec is None:
-                rows.append(f"| {arch} | {shape} | … | … | … | pending | … | … | … | … |")
+                rows.append(f"| {arch} | {shape} | … | … | … | … | pending | "
+                            f"… | … | … | … |")
                 continue
             if "error" in rec:
-                rows.append(f"| {arch} | {shape} | — | — | — | "
+                rows.append(f"| {arch} | {shape} | — | — | — | — | "
                             f"FAILED: {rec['error'][:60]} | — | — | — | — |")
                 continue
             r = rec["roofline"]
             m = rec["memory"]
+            # records written before the CommSchedule refactor lack the
+            # exposed term; exposed == raw collective time for them
+            t_exp = r.get("t_exposed_collective_s", r["t_collective_s"])
             rows.append(
                 f"| {arch} | {shape} | {fmt_t(r['t_compute_s'])} | "
                 f"{fmt_t(r['t_memory_s'])} | {fmt_t(r['t_collective_s'])} | "
+                f"{fmt_t(t_exp)} | "
                 f"{r['bottleneck']} | {r['compute_fraction']:.2f} | "
                 f"{r['useful_flops_ratio']:.2f} | "
                 f"{fmt_bytes(r['wire_bytes_per_device'])} | "

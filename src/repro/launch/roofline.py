@@ -125,6 +125,9 @@ class Roofline:
     hbm_bytes_per_device: float
     wire_bytes_per_device: float
     model_flops: float = 0.0
+    overlap_fraction: float = 0.0   # CommSchedule.overlap_fraction: share of
+                                    # collective traffic issued while compute
+                                    # remains (0 = serialised after compute)
 
     @property
     def t_compute(self) -> float:
@@ -139,6 +142,15 @@ class Roofline:
         return self.wire_bytes_per_device / ICI_BW
 
     @property
+    def t_exposed_collective(self) -> float:
+        """Collective time left *exposed* after hiding under the compute the
+        schedule makes overlappable: ``max(0, t_collective −
+        overlap_fraction · t_compute)``.  Equals ``t_collective`` for an
+        ``accumulate_then_reduce`` schedule (overlap 0); never exceeds it."""
+        hidden = min(1.0, max(0.0, self.overlap_fraction)) * self.t_compute
+        return max(0.0, self.t_collective - hidden)
+
+    @property
     def bottleneck(self) -> str:
         terms = {"compute": self.t_compute, "memory": self.t_memory,
                  "collective": self.t_collective}
@@ -147,6 +159,12 @@ class Roofline:
     @property
     def bound_time(self) -> float:
         return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def bound_time_overlapped(self) -> float:
+        """Step-time bound when the schedule's overlap is realised: only the
+        exposed collective time serialises with compute."""
+        return max(self.t_compute, self.t_memory, self.t_exposed_collective)
 
     @property
     def compute_fraction(self) -> float:
@@ -168,8 +186,11 @@ class Roofline:
             "t_compute_s": self.t_compute,
             "t_memory_s": self.t_memory,
             "t_collective_s": self.t_collective,
+            "t_exposed_collective_s": self.t_exposed_collective,
+            "overlap_fraction": self.overlap_fraction,
             "bottleneck": self.bottleneck,
             "compute_fraction": self.compute_fraction,
+            "bound_time_overlapped_s": self.bound_time_overlapped,
             "model_flops": self.model_flops,
             "useful_flops_ratio": self.useful_flops_ratio(n_devices),
         }

@@ -14,7 +14,8 @@ import dataclasses
 
 import jax
 
-from repro.comm import CommConfig, POLICY_TO_TRANSPORT, list_transports
+from repro.comm import (CommConfig, POLICY_TO_TRANSPORT, SCHEDULE_POLICIES,
+                        list_transports)
 from repro.configs import get_config, list_archs, reduced_config
 from repro.configs.base import ShapeConfig
 from repro.core.overlap import AccumConfig
@@ -43,6 +44,9 @@ def main() -> None:
                     choices=tuple(POLICY_TO_TRANSPORT),
                     help="DEPRECATED legacy policy name; maps to a transport")
     ap.add_argument("--dp-mode", default=None, choices=DP_MODES)
+    ap.add_argument("--accum-policy", default=None, choices=SCHEDULE_POLICIES,
+                    help="gradient-reduction issue schedule (default: "
+                         "accumulate_then_reduce)")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 mesh (needs 256 devices)")
     ap.add_argument("--multi-pod", action="store_true")
@@ -77,7 +81,8 @@ def main() -> None:
         comm=ccfg,
         optim=OptimConfig(base_lr=args.lr, warmup=min(20, args.steps // 5),
                           schedule=schedule, total_steps=args.steps),
-        accum=AccumConfig(microbatches=1 if args.reduced else st.microbatches))
+        accum=AccumConfig(microbatches=1 if args.reduced else st.microbatches),
+        schedule=args.accum_policy)
     trainer = Trainer(model, mesh, step_cfg, data, shape,
                       TrainerConfig(steps=args.steps, ckpt_every=50,
                                     ckpt_dir=args.ckpt_dir, log_every=10))

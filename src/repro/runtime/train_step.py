@@ -24,11 +24,16 @@ DP modes (rungs of the paper's ladder):
   entry, and the *autodiff transpose of that gather is exactly the ring
   reduce-scatter*, so gradients arrive pre-sharded for free.  Built entirely
   from the paper's collectives.
+
+When each bucket's reduction is *issued* is no longer implicit: every mode
+executes a :class:`repro.comm.schedule.CommSchedule`
+(:func:`build_step_schedule`) via ``Communicator.reduce_scheduled``, so
+streamed per-bucket reduction overlaps with remaining backward compute and
+the dry-run/roofline layers can predict the exposed communication.
 """
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field, replace
 from typing import Any
 
@@ -40,8 +45,9 @@ import numpy as np
 
 from repro import compat
 from repro.comm import CommConfig, Communicator
+from repro.comm.schedule import CommSchedule, SCHEDULE_POLICIES, build_schedule
 from repro.core.bucketing import BucketPlan
-from repro.core.overlap import AccumConfig, accumulate_and_reduce
+from repro.core.overlap import AccumConfig
 from repro.core.reducer import ReduceConfig
 from repro.models.model_api import Model
 from repro.models.parallel import ParallelCtx
@@ -61,6 +67,8 @@ class TrainStepConfig:
     reduce: ReduceConfig = field(default_factory=ReduceConfig)  # legacy
     optim: OptimConfig = field(default_factory=OptimConfig)
     accum: AccumConfig = field(default_factory=AccumConfig)
+    schedule: str | None = None        # SCHEDULE_POLICIES member; None ->
+                                       # fall back to accum.policy
     causal_skip: bool = False
     gather_dtype: str = "bfloat16"     # fsdp weight-gather wire dtype
     fsdp_bucket_bytes: int = 512 * 2**20
@@ -72,6 +80,17 @@ class TrainStepConfig:
         otherwise the legacy ``reduce`` policy mapped onto a transport."""
         ccfg = self.comm if self.comm is not None else self.reduce.comm_config()
         return replace(ccfg, data_axes=data_axes)
+
+    @property
+    def schedule_policy(self) -> str:
+        """The schedule family the step executes: the new-style ``schedule``
+        field, else the legacy ``accum.policy`` mapped onto its canned
+        schedule."""
+        pol = self.schedule if self.schedule is not None else self.accum.policy
+        if pol not in SCHEDULE_POLICIES:
+            raise ValueError(f"unknown schedule policy {pol!r}; one of "
+                             f"{SCHEDULE_POLICIES}")
+        return pol
 
 
 # ---------------------------------------------------------------------------
@@ -370,6 +389,35 @@ def init_train_state(model: Model, mesh: Mesh, cfg: TrainStepConfig,
 # ---------------------------------------------------------------------------
 
 
+def build_step_schedule(model: Model, mesh: Mesh, cfg: TrainStepConfig
+                        ) -> CommSchedule:
+    """The :class:`CommSchedule` the step executes (also what the dry-run
+    records and the roofline's overlap fraction reads).
+
+    ``replicated`` / ``zero1`` derive issue slots from the communicator's
+    bucket layout of the local gradient tree.  ``fsdp`` always reports the
+    ``scheduled`` readiness model regardless of the configured policy: its
+    reduce-scatter is the autodiff transpose of the per-layer weight gather,
+    so streaming in backward readiness order is *intrinsic* — the accum
+    policy only shapes local shard accumulation, never serialises comm.
+    """
+    policy = cfg.schedule_policy
+    m = cfg.accum.microbatches
+    if cfg.dp_mode == "fsdp":
+        return _fsdp_schedule(FsdpPlan(model, mesh, cfg), m)
+    comm = build_comm(mesh, cfg)
+    pspecs = model.param_specs(mesh)
+    local = _local_shapes(model.abstract_params(), pspecs, mesh)
+    return comm.schedule(local, policy, m)
+
+
+def _fsdp_schedule(plan: FsdpPlan, microbatches: int) -> CommSchedule:
+    sizes = [n for name in sorted(plan.plans)
+             for n in plan.plans[name].bucket_sizes]
+    return build_schedule("scheduled", sizes, microbatches=microbatches,
+                          channels=plan.comm.cfg.channels)
+
+
 def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                      batch_pspecs, donate: bool = True):
     """Returns ``step(state, batch) -> (state, metrics)`` jitted over the
@@ -384,6 +432,10 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
 
     if cfg.dp_mode in ("replicated", "zero1"):
         comm = build_comm(mesh, cfg)
+        local_abs = _local_shapes(model.abstract_params(), pspecs, mesh)
+        # single source with the dry-run's prediction: the schedule the step
+        # executes IS the one build_step_schedule reports
+        comm_sched = build_step_schedule(model, mesh, cfg)
         zero1_norm_weights = None
         if cfg.dp_mode == "zero1":
             if not comm.spec.supports_rs:
@@ -391,7 +443,6 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                     f"dp_mode='zero1' needs a transport with supports_rs; "
                     f"{comm.cfg.transport!r} has none (registered ring "
                     f"transports do)")
-            local_abs = _local_shapes(model.abstract_params(), pspecs, mesh)
             z1_plan = comm.bucketer.plan(local_abs)
             specs_flat = jax.tree_util.tree_flatten(
                 pspecs, is_leaf=lambda x: isinstance(x, P))[0]
@@ -409,9 +460,9 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                 return loss, g
 
             if cfg.dp_mode == "replicated":
-                loss, grads = accumulate_and_reduce(
-                    grad_fn, lambda g: comm.all_reduce_tree(g)[0],
-                    state["params"], batch, cfg.accum)
+                loss, grads = comm.reduce_scheduled(
+                    grad_fn, state["params"], batch, comm_sched,
+                    op="all_reduce")
                 gnorm = global_grad_norm(grads, pspecs, ctx)
                 factor = clip_factor(gnorm, cfg.optim.clip_norm)
                 grads = jax.tree.map(lambda g: g * factor, grads)
@@ -421,10 +472,11 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                     cfg.optim)
                 new_state = {"params": new_p, "opt": new_opt,
                              "step": state["step"] + 1}
-            else:  # zero1
-                loss, grads = accumulate_and_reduce(
-                    grad_fn, lambda g: g, state["params"], batch, cfg.accum)
-                shards, plan = comm.reduce_scatter_tree(grads)
+            else:  # zero1: buckets reduce-scatter as their microbatch's
+                   # backward finishes (streamed ZeRO); shards accumulate
+                loss, (shards, plan) = comm.reduce_scheduled(
+                    grad_fn, state["params"], batch, comm_sched,
+                    op="reduce_scatter")
                 # exact global norm over the *reduced* gradient: weight
                 # model-replicated fields by 1/model_size before the psum
                 ordered = comm.ordered_axes
@@ -454,6 +506,9 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
     else:  # fsdp / ZeRO-3
         plan = FsdpPlan(model, mesh, cfg)
         gdt = jnp.dtype(cfg.gather_dtype)
+        # reduction rides the autodiff transpose of the per-layer gather, so
+        # streaming in readiness order is intrinsic; the schedule records it
+        comm_sched = _fsdp_schedule(plan, cfg.accum.microbatches)
 
         def step_fn(state, batch):
             def gfn(groups, mb):
@@ -466,8 +521,8 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
             def grad_fn(groups, mb):
                 return jax.value_and_grad(gfn)(groups, mb)
 
-            loss, grads = accumulate_and_reduce(
-                grad_fn, lambda g: g, state["groups"], batch, cfg.accum)
+            loss, grads = plan.comm.reduce_scheduled(
+                grad_fn, state["groups"], batch, comm_sched, op="none")
             # grads are flat shards already (AG-transpose == RS-sum over the
             # data axes); normalise the sum into a mean.
             inv = 1.0 / max(plan.dp_world, 1)
