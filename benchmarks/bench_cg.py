@@ -1,0 +1,83 @@
+"""End-to-end solver benchmark: CG on the Wilson-like stencil operator,
+halo schedule × channels sweep — the paper's Tables V/VI workload driven to
+convergence instead of a single operator application.
+
+``python -m benchmarks.bench_cg --dry`` runs one tiny lattice per schedule
+and asserts convergence (the CI stencil smoke job).
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import TIMER_SNIPPET, run_on_devices
+
+_BODY = r"""
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.comm import CommConfig, Communicator, HALO_SCHEDULES
+from repro.core.halo import HaloSpec
+from repro.stencil import StencilOp, cg_solve
+
+mesh = compat.make_mesh((2, 2, 2), ("x", "y", "z"))
+SPECS = (HaloSpec("x", 0), HaloSpec("y", 1), HaloSpec("z", 2))
+op = StencilOp(specs=SPECS, mass=0.5)
+
+def solver(comm, schedule, channels, tol, maxiter):
+    def run(b):
+        r = cg_solve(op, b, comm, tol=tol, maxiter=maxiter, schedule=schedule,
+                     chunks=comm.halo_chunks, channels=channels)
+        return r.x, r.iters, r.rel_residual
+    return jax.jit(compat.shard_map(run, mesh=mesh,
+                                    in_specs=P("x", "y", "z", None),
+                                    out_specs=(P("x", "y", "z", None), P(), P()),
+                                    check_vma=False))
+
+print("schedule,channels,local_vol,iters,rel_residual,us_per_solve,us_per_iter")
+rng = np.random.RandomState(0)
+for L in LATTICES:
+    b = jnp.asarray(rng.randn(2*L, 2*L, 2*L, C).astype(np.float32))
+    for schedule in HALO_SCHEDULES:
+        for channels in CHANNELS:
+            comm = Communicator(mesh, CommConfig(
+                transport="psum", data_axes=("x", "y", "z"),
+                channels=channels))
+            fn = solver(comm, schedule, channels, TOL, MAXITER)
+            x, iters, rel = jax.block_until_ready(fn(b))
+            assert float(rel) < TOL, (schedule, channels, float(rel))
+            sec = time_call(fn, b)
+            it = max(int(iters), 1)
+            print(f"{schedule},{channels},{L}^3,{int(iters)},"
+                  f"{float(rel):.2e},{sec*1e6:.1f},{sec*1e6/it:.1f}")
+print("CG_BENCH_OK")
+"""
+
+SWEEP_HEADER = """
+LATTICES = [8, 12]
+C = 12
+CHANNELS = [1, 2, 4]
+TOL = 1e-5
+MAXITER = 200
+"""
+
+DRY_HEADER = """
+LATTICES = [4]
+C = 4
+CHANNELS = [2]
+TOL = 1e-5
+MAXITER = 100
+"""
+
+
+def run(dry: bool = False) -> str:
+    header = DRY_HEADER if dry else SWEEP_HEADER
+    return run_on_devices(TIMER_SNIPPET + header + _BODY)
+
+
+if __name__ == "__main__":
+    out = run(dry="--dry" in sys.argv)
+    print(out)
+    if "CG_BENCH_OK" not in out:
+        sys.exit(1)

@@ -13,8 +13,8 @@ import argparse
 import sys
 import time
 
-from benchmarks import bench_allreduce, bench_halo, bench_overhead, \
-    bench_overlap, bench_stencil
+from benchmarks import bench_allreduce, bench_cg, bench_halo, \
+    bench_overhead, bench_overlap, bench_stencil
 
 SECTIONS = [
     ("fig1_2_5_allreduce", bench_allreduce.run,
@@ -28,6 +28,9 @@ SECTIONS = [
      "Tables I-III: halo exchange schedules"),
     ("tab5_6_stencil", bench_stencil.run,
      "Tables V/VI: stencil application throughput"),
+    ("tab5_6_cg_solver", bench_cg.run,
+     "CG on the Wilson-like operator to convergence: "
+     "halo schedule x channels"),
 ]
 
 

@@ -14,17 +14,22 @@ remains as a deprecated shim over this package.
 
 from repro.comm.api import (CommConfig, Communicator, POLICY_TO_TRANSPORT,
                             comm_config_from_policy)
-from repro.comm.plan import ChannelAssignment, CommPlan, assign_channels
+from repro.comm.plan import (ChannelAssignment, CommPlan, HaloChannel,
+                             HaloPlan, assign_channels)
 from repro.comm.registry import (Transport, TransportSpec, get_transport,
                                  list_transports, register_transport,
                                  transport_specs)
-from repro.comm.schedule import (CommSchedule, IssueSlot, SCHEDULE_POLICIES,
-                                 build_schedule)
+from repro.comm.schedule import (CommSchedule, HALO_SCHEDULES, IssueSlot,
+                                 SCHEDULE_POLICIES, build_halo_schedule,
+                                 build_schedule, halo_interior_fraction,
+                                 halo_units)
 
 __all__ = [
     "ChannelAssignment", "CommConfig", "CommPlan", "CommSchedule",
-    "Communicator", "IssueSlot", "POLICY_TO_TRANSPORT", "SCHEDULE_POLICIES",
-    "Transport", "TransportSpec", "assign_channels", "build_schedule",
-    "comm_config_from_policy", "get_transport", "list_transports",
-    "register_transport", "transport_specs",
+    "Communicator", "HALO_SCHEDULES", "HaloChannel", "HaloPlan", "IssueSlot",
+    "POLICY_TO_TRANSPORT", "SCHEDULE_POLICIES", "assign_channels",
+    "build_halo_schedule", "build_schedule", "comm_config_from_policy",
+    "get_transport", "halo_interior_fraction", "halo_units",
+    "list_transports", "register_transport", "Transport", "TransportSpec",
+    "transport_specs",
 ]

@@ -36,9 +36,11 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.comm.plan import ChannelAssignment, CommPlan, assign_channels
+from repro.comm.plan import (ChannelAssignment, CommPlan, HaloChannel,
+                             HaloPlan, assign_channels)
 from repro.comm.registry import Transport, get_transport
-from repro.comm.schedule import CommSchedule, build_schedule
+from repro.comm.schedule import (CommSchedule, build_halo_schedule,
+                                 build_schedule, halo_units)
 from repro.core.bucketing import BucketPlan, GradientBucketer
 from repro.core.compression import ErrorFeedback
 from repro.core.halo import HaloSpec, halo_exchange as _halo_exchange
@@ -195,15 +197,75 @@ class Communicator:
             return shard
         return self.transport.all_gather(shard)
 
+    @property
+    def halo_chunks(self) -> int:
+        """Pieces each face splits into under the ``chunked`` schedule:
+        the channel knob when set, else 4 (the paper's threaded default).
+        Single source of the fallback for the executor, the prediction
+        layers, and the benchmarks."""
+        return self.cfg.channels if self.cfg.channels >= 1 else 4
+
+    def _halo_schedule_name(self, schedule: str | None) -> str:
+        return schedule if schedule is not None else (
+            "chunked" if self.cfg.channels >= 2 else "concurrent")
+
     def halo_exchange(self, x: jax.Array, specs: Sequence[HaloSpec], *,
                       schedule: str | None = None) -> dict:
         """Cartesian halo exchange sharing the communicator's channel knob:
-        ``channels >= 2`` splits every face across that many independent
-        rails (the paper's threaded multi-EP columns)."""
-        if schedule is None:
-            schedule = "chunked" if self.cfg.channels >= 2 else "concurrent"
-        chunks = self.cfg.channels if self.cfg.channels >= 1 else 4
-        return _halo_exchange(x, specs, schedule=schedule, chunks=chunks)
+        under ``chunked``, ``channels >= 2`` splits every face across that
+        many independent rails (the paper's threaded multi-EP columns);
+        under ``overlap``, whole faces are striped across the ``channels``
+        guaranteed rails with per-rail FIFO order — the same rail rule as
+        :meth:`reduce_scheduled` — so interior stencil compute can hide the
+        transfers (see :mod:`repro.stencil.op`)."""
+        return _halo_exchange(x, specs,
+                              schedule=self._halo_schedule_name(schedule),
+                              chunks=self.halo_chunks,
+                              channels=self.cfg.channels)
+
+    def halo_schedule(self, x_shape: Sequence[int], specs: Sequence[HaloSpec],
+                      *, schedule: str | None = None,
+                      itemsize: int = 4) -> CommSchedule:
+        """The issue slots :meth:`halo_exchange` would execute for one local
+        shard of ``x_shape`` — halo overlap as a first-class
+        :class:`~repro.comm.schedule.CommSchedule`, exactly like bucket
+        reduction (its ``overlap_fraction`` feeds the roofline's
+        ``t_exposed_collective``)."""
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        return build_halo_schedule(specs, x_shape,
+                                   schedule=self._halo_schedule_name(schedule),
+                                   channels=self.cfg.channels,
+                                   chunks=self.halo_chunks,
+                                   itemsize=itemsize, axis_sizes=sizes)
+
+    def halo_plan(self, x_shape: Sequence[int], specs: Sequence[HaloSpec], *,
+                  schedule: str | None = None, itemsize: int = 4) -> HaloPlan:
+        """Halo bytes per direction × channel for one exchange — the
+        :class:`~repro.comm.plan.HaloPlan` analogue of :meth:`plan`, read by
+        the dry-run's stencil suite and ``benchmarks/bench_cg.py``."""
+        sched = self.halo_schedule(x_shape, specs, schedule=schedule,
+                                   itemsize=itemsize)
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        keys, _ = halo_units(specs, x_shape, schedule=sched.policy,
+                             chunks=self.halo_chunks,
+                             itemsize=itemsize, axis_sizes=sizes)
+        by_channel: dict[int, list[int]] = {}
+        for slot in sched.slots:
+            by_channel.setdefault(slot.channel, []).extend(slot.bucket_ids)
+        chans = tuple(HaloChannel(c, tuple(sorted(u)), sum(
+            sched.bucket_sizes[i] for i in u)) for c, u in
+            sorted(by_channel.items()))
+        return HaloPlan(
+            schedule=sched.policy,
+            axes=tuple(s.axis for s in specs),
+            axis_sizes=tuple(sizes.get(s.axis, 1) for s in specs),
+            local_shape=tuple(int(n) for n in x_shape),
+            halos=tuple(s.halo for s in specs),
+            unit_keys=tuple(keys),
+            unit_bytes=sched.bucket_sizes,
+            channels=chans,
+            overlap_fraction=sched.overlap_fraction,
+        )
 
     # -- tree-level ops (inside a fully-manual shard_map) --------------------
 

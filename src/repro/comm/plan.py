@@ -117,3 +117,73 @@ class CommPlan:
                           "elems": a.elems} for a in self.channels],
             **self.predicted_collective_bytes(),
         }
+
+
+@dataclass(frozen=True)
+class HaloChannel:
+    """Units carried by one halo rail, with their payload *bytes* (unlike
+    :class:`ChannelAssignment`, whose loads are element counts)."""
+
+    channel: int
+    units: tuple[int, ...]     # indices into the unit list, ascending
+    bytes: int
+
+
+@dataclass(frozen=True)
+class HaloPlan:
+    """The halo-exchange analogue of :class:`CommPlan`: bytes per direction
+    × channel for one Cartesian exchange, plus the predicted wire bytes.
+
+    ``units`` are the individual ``ppermute`` payloads (one per direction,
+    times the chunk split under the ``chunked`` schedule), labelled
+    ``"<axis><dir>[#chunk]"``; ``unit_bytes[i]`` is unit ``i``'s payload
+    size.  Each unit crosses the wire exactly once (a ``collective-permute``
+    is one hop), so ``bytes_per_device`` is simply the payload total — the
+    dry-run's stencil suite checks this against the bytes parsed from the
+    lowered HLO.  Self-neighbour exchanges (mesh axis of size 1) still lower
+    to a ``collective-permute`` and are therefore counted.
+    """
+
+    schedule: str
+    axes: tuple[str, ...]          # mesh axis per exchanged direction spec
+    axis_sizes: tuple[int, ...]
+    local_shape: tuple[int, ...]
+    halos: tuple[int, ...]         # face width per spec
+    unit_keys: tuple[str, ...]
+    unit_bytes: tuple[int, ...]
+    channels: tuple[HaloChannel, ...]
+    overlap_fraction: float
+
+    @property
+    def n_units(self) -> int:
+        return len(self.unit_bytes)
+
+    @property
+    def bytes_per_device(self) -> float:
+        """Predicted wire bytes per device per exchange (one hop per unit)."""
+        return float(sum(self.unit_bytes))
+
+    @property
+    def channel_imbalance(self) -> float:
+        """max/mean channel load (1.0 = perfectly striped)."""
+        loads = [a.bytes for a in self.channels]
+        mean = sum(loads) / max(len(loads), 1)
+        return max(loads) / mean if mean else 1.0
+
+    def describe(self) -> dict:
+        """JSON-friendly summary for the dry-run report."""
+        return {
+            "schedule": self.schedule,
+            "axes": list(self.axes),
+            "axis_sizes": list(self.axis_sizes),
+            "local_shape": list(self.local_shape),
+            "halos": list(self.halos),
+            "n_units": self.n_units,
+            "units": [{"key": k, "bytes": b}
+                      for k, b in zip(self.unit_keys, self.unit_bytes)],
+            "channels": [{"channel": a.channel, "units": list(a.units),
+                          "bytes": a.bytes} for a in self.channels],
+            "bytes_per_device": self.bytes_per_device,
+            "channel_imbalance": self.channel_imbalance,
+            "overlap_fraction": self.overlap_fraction,
+        }

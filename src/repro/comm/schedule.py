@@ -36,12 +36,18 @@ which :mod:`repro.launch.roofline` turns into
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Sequence
 
 from repro.comm.plan import assign_channels
 
 SCHEDULE_POLICIES = ("accumulate_then_reduce", "stream", "scheduled")
+
+# halo-exchange issue orders (the paper's Seq / Concurrent / Threaded columns
+# plus the interior-compute overlap schedule); executed by
+# :func:`repro.core.halo.halo_exchange`
+HALO_SCHEDULES = ("sequential", "concurrent", "chunked", "overlap")
 
 
 @dataclass(frozen=True)
@@ -215,5 +221,107 @@ def build_schedule(policy: str, bucket_sizes: Sequence[int],
                                        channel=chan_of[b], ready=ready))
     sched = CommSchedule(policy=policy, microbatches=m, bucket_sizes=sizes,
                          channels=int(channels), slots=tuple(slots))
+    sched.validate()
+    return sched
+
+
+def halo_interior_fraction(local_shape: Sequence[int], specs) -> float:
+    """Share of local lattice sites computable before any halo arrives: the
+    interior block, ``halo`` sites away from every exchanged face.  This is
+    the compute an ``overlap`` halo schedule can hide face transfers under
+    (:class:`repro.stencil.op.StencilOp` materialises exactly this split)."""
+    frac = 1.0
+    for s in specs:
+        n = int(local_shape[s.dim])
+        frac *= max(n - 2 * s.halo, 0) / max(n, 1)
+    return frac
+
+
+def halo_units(specs, local_shape: Sequence[int], *, schedule: str,
+               chunks: int = 1, itemsize: int = 4,
+               axis_sizes: dict | None = None
+               ) -> tuple[tuple[str, ...], tuple[int, ...]]:
+    """Enumerate one exchange's ``ppermute`` payloads: ``(keys, bytes)``,
+    one entry per unit, in issue order — per spec the ``'-'`` then ``'+'``
+    direction, each split into its chunk pieces under ``chunked``
+    (``"x-#2"``-style keys).  ``axis_sizes`` (mesh axis -> size), when
+    known, suppresses the chunk split on size-1 axes exactly like the
+    executor does.  Single source of truth for :func:`build_halo_schedule`
+    and :meth:`Communicator.halo_plan`."""
+    from repro.core.halo import chunk_sizes, face_split_dim
+
+    keys: list[str] = []
+    unit_bytes: list[int] = []
+    for s in specs:
+        face_shape = [int(n) for n in local_shape]
+        face_shape[s.dim] = s.halo
+        elems = math.prod(face_shape)
+        p = axis_sizes.get(s.axis, 2) if axis_sizes is not None else 2
+        if schedule == "chunked" and chunks > 1 and p > 1:
+            split_dim = face_split_dim(tuple(face_shape), s.dim)
+            row = elems // max(face_shape[split_dim], 1)
+            pieces = [row * c for c in
+                      chunk_sizes(face_shape[split_dim], chunks)]
+        else:
+            pieces = [elems]
+        for d in ("-", "+"):                  # both directions, spec order
+            keys.extend(f"{s.axis}{d}" + (f"#{c}" if len(pieces) > 1 else "")
+                        for c in range(len(pieces)))
+            unit_bytes.extend(p * itemsize for p in pieces)
+    return tuple(keys), tuple(unit_bytes)
+
+
+def build_halo_schedule(specs, local_shape: Sequence[int], *,
+                        schedule: str, channels: int = 0, chunks: int = 1,
+                        itemsize: int = 4,
+                        axis_sizes: dict | None = None) -> CommSchedule:
+    """Issue slots for one Cartesian halo exchange, as a :class:`CommSchedule`.
+
+    The *units* are the individual ``ppermute`` payloads the exchange puts in
+    flight — one per direction (``(axis, '-')`` then ``(axis, '+')`` per
+    spec, in spec order), further split into ``chunks`` uneven-tolerant
+    pieces under the ``chunked`` schedule (mirroring
+    :func:`repro.core.halo.chunk_sizes`).  ``bucket_sizes`` are payload
+    *bytes*, so :attr:`CommSchedule.overlap_fraction` is traffic-weighted
+    exactly like the reduction schedules.
+
+    Channel semantics per schedule:
+
+    * ``sequential`` — every unit on rail 0 (one FIFO chain: the executor's
+      order token makes each transfer data-dependent on the previous);
+    * ``concurrent`` / ``chunked`` — every unit its own rail (fully
+      independent collectives, ``channels`` ignored);
+    * ``overlap``    — units striped across ``channels`` guaranteed rails
+      (``0`` = unconstrained), issued at ``ready = 1 - interior_fraction``:
+      only the interior compute can hide a face still in flight, because the
+      boundary sites wait for it.
+    """
+    if schedule not in HALO_SCHEDULES:
+        raise ValueError(f"unknown halo schedule {schedule!r}; one of "
+                         f"{HALO_SCHEDULES}")
+    _, unit_bytes = halo_units(specs, local_shape, schedule=schedule,
+                               chunks=chunks, itemsize=itemsize,
+                               axis_sizes=axis_sizes)
+    n_units = len(unit_bytes)
+    ready = 1.0
+    if schedule == "overlap":
+        ready = 1.0 - halo_interior_fraction(local_shape, specs)
+    if schedule == "sequential":
+        chan_of = [0] * n_units
+        knob = 1
+    elif schedule == "overlap" and channels >= 1:
+        chan_of = [0] * n_units
+        for a in assign_channels(unit_bytes, channels):
+            for u in a.buckets:
+                chan_of[u] = a.channel
+        knob = channels
+    else:                                     # concurrent/chunked/overlap@0
+        chan_of = list(range(n_units))
+        knob = 0
+    slots = tuple(IssueSlot(phase=0, bucket_ids=(u,), channel=chan_of[u],
+                            ready=ready) for u in range(n_units))
+    sched = CommSchedule(policy=schedule, microbatches=1,
+                         bucket_sizes=tuple(unit_bytes), channels=knob,
+                         slots=slots)
     sched.validate()
     return sched

@@ -257,6 +257,131 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return out
 
 
+STENCIL_MESH = {"single": ((4, 8, 8), 256), "multi": ((8, 8, 8), 512)}
+
+
+def run_stencil_cell(L: int, schedule: str, multi_pod: bool, *,
+                     channels: int = 2, halo: int = 1, components: int = 12,
+                     cg_iters: int = 3) -> dict:
+    """One stencil-suite cell: lower + compile ``cg_iters`` unrolled CG
+    iterations on a Wilson-like operator over a 3-D Cartesian mesh, and
+    check the :class:`~repro.comm.HaloPlan` prediction against the
+    ``collective-permute`` bytes parsed from the optimized HLO (each CG
+    iteration is exactly one halo exchange; inner products ride ``psum``
+    all-reduces, so the two op kinds separate cleanly in the parse)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.comm import CommConfig, Communicator
+    from repro.core.halo import HaloSpec
+    from repro.stencil import StencilOp, cg_solve
+
+    mesh_shape, n_dev = STENCIL_MESH["multi" if multi_pod else "single"]
+    mesh = compat.make_mesh(mesh_shape, ("x", "y", "z"),
+                            devices=jax.devices()[:n_dev])
+    specs = (HaloSpec("x", 0, halo), HaloSpec("y", 1, halo),
+             HaloSpec("z", 2, halo))
+    local = (L, L, L, components)
+    gshape = tuple(p * n for p, n in zip(mesh_shape + (1,), local))
+    comm = Communicator(mesh, CommConfig(transport="psum",
+                                         data_axes=("x", "y", "z"),
+                                         channels=channels))
+    op = StencilOp(specs=specs, mass=0.8)
+    hplan = comm.halo_plan(local, specs, schedule=schedule)
+    hsched = comm.halo_schedule(local, specs, schedule=schedule)
+
+    def run(b):
+        r = cg_solve(op, b, comm, tol=None, maxiter=cg_iters,
+                     schedule=schedule, chunks=comm.halo_chunks,
+                     channels=channels)
+        return r.x, r.rel_residual
+
+    with mesh:
+        fn = jax.jit(compat.shard_map(
+            run, mesh=mesh, in_specs=P("x", "y", "z", None),
+            out_specs=(P("x", "y", "z", None), P()), check_vma=False))
+        lowered = fn.lower(jax.ShapeDtypeStruct(gshape, jnp.float32))
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    stats = collective_wire_bytes(compiled.as_text())
+    predicted = cg_iters * hplan.bytes_per_device
+    measured = stats.op_bytes.get("collective-permute", 0.0)
+    roof = Roofline(
+        flops_per_device=float(ca.get("flops", 0.0)),
+        hbm_bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        wire_bytes_per_device=stats.wire_bytes,
+        overlap_fraction=hsched.overlap_fraction,
+    )
+    return {
+        "arch": "stencil",
+        "shape": f"L{L}h{halo}",
+        "schedule": schedule,
+        "mesh": "x".join(str(s) for s in mesh_shape),
+        "devices": n_dev,
+        "compile_s": compile_s,
+        "cg_iters": cg_iters,
+        "predicted_halo_bytes": predicted,
+        "hlo_collective_permute_bytes": measured,
+        "halo_bytes_rel_err": (abs(measured - predicted) / predicted
+                               if predicted else None),
+        "roofline": roof.as_dict(n_dev),
+        "collectives": {"counts": stats.op_counts, "bytes": stats.op_bytes,
+                        "while_loops": stats.while_loops},
+        "halo_plan": hplan.describe(),
+        "halo_schedule": hsched.describe(),
+    }
+
+
+def run_stencil_suite(args, meshes, cache: dict) -> None:
+    """The ``--suite stencil`` grid: lattice volume × halo schedule × mesh.
+    Cells land in the same cache/out file as the train suite."""
+    from repro.comm import HALO_SCHEDULES
+
+    lattices = [int(s) for s in str(args.lattice).split(",")]
+    schedules = (list(HALO_SCHEDULES) if args.halo_schedule == "all"
+                 else args.halo_schedule.split(","))
+    for L in lattices:
+        for schedule in schedules:
+            for multi in meshes:
+                # channels and cg_iters scale the recorded prediction, so
+                # they belong in the cache key (unlike the train suite,
+                # where the tag disambiguates overrides)
+                key = (f"{args.tag}|stencil_L{L}h{args.halo}"
+                       f"c{args.channels}i{args.cg_iters}|{schedule}|"
+                       f"{'multi' if multi else 'single'}")
+                if key in cache and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[lower+compile] {key} ...", flush=True)
+                t0 = time.time()
+                try:
+                    rec = run_stencil_cell(L, schedule, multi,
+                                           channels=args.channels,
+                                           halo=args.halo,
+                                           cg_iters=args.cg_iters)
+                    rec["tag"] = args.tag
+                    cache[key] = rec
+                    r = rec["roofline"]
+                    err = rec["halo_bytes_rel_err"]
+                    print(f"  ok in {time.time()-t0:.1f}s: "
+                          f"halo_bytes={rec['predicted_halo_bytes']:.0f} "
+                          f"(HLO err {err:.2%}) "
+                          f"Tx={r['t_collective_s']:.6f}s "
+                          f"Tx_exposed={r['t_exposed_collective_s']:.6f}s "
+                          f"overlap={r['overlap_fraction']:.2f}", flush=True)
+                except Exception as e:
+                    cache[key] = {"error": str(e), "tag": args.tag,
+                                  "arch": "stencil", "shape": f"L{L}"}
+                    print(f"  FAILED: {e}")
+                    traceback.print_exc()
+                with open(args.out, "w") as f:
+                    json.dump(cache, f, indent=1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
@@ -275,6 +400,23 @@ def main() -> None:
                     help="issue schedule for the gradient reduction "
                          "(stream/scheduled overlap comm with backward "
                          "compute; reflected in t_exposed_collective)")
+    ap.add_argument("--suite", default="train", choices=["train", "stencil"],
+                    help="train: the arch x shape grid below; stencil: the "
+                         "QCD workload — lattice-volume x halo-schedule "
+                         "cells on a 3-D Cartesian mesh, checking HaloPlan "
+                         "predictions against lowered collective-permutes")
+    ap.add_argument("--lattice", default="8",
+                    help="stencil suite: comma-separated local lattice "
+                         "extents (local volume = L^3 x 12 components)")
+    ap.add_argument("--halo-schedule", default="all",
+                    help="stencil suite: comma-separated halo schedules, or "
+                         "'all'")
+    ap.add_argument("--halo", type=int, default=1,
+                    help="stencil suite: face width (1 or 2)")
+    ap.add_argument("--channels", type=int, default=2,
+                    help="stencil suite: communicator virtual channels")
+    ap.add_argument("--cg-iters", type=int, default=3,
+                    help="stencil suite: unrolled CG iterations per cell")
     args = ap.parse_args()
 
     archs = list_archs() if args.arch == "all" else args.arch.split(",")
@@ -285,6 +427,13 @@ def main() -> None:
     if os.path.exists(args.out):
         with open(args.out) as f:
             cache = json.load(f)
+
+    if args.suite == "stencil":
+        run_stencil_suite(args, meshes, cache)
+        n_ok = sum(1 for v in cache.values() if "error" not in v)
+        n_err = sum(1 for v in cache.values() if "error" in v)
+        print(f"done: {n_ok} ok, {n_err} failed -> {args.out}")
+        return
 
     for arch in archs:
         cfg = get_config(arch)

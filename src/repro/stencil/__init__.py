@@ -1,0 +1,16 @@
+"""repro.stencil — structured-grid PDE solvers on top of the Communicator.
+
+The paper's first workload end-to-end: a Wilson-like nearest-neighbour
+operator over an N-D Cartesian mesh (:mod:`repro.stencil.op`) whose halo
+exchange runs any of the four :data:`repro.comm.HALO_SCHEDULES`, and a
+conjugate-gradient solver (:mod:`repro.stencil.cg`) whose global inner
+products ride the communicator's channelized ``all_reduce`` — the QCD
+analogue of the SGD reduction path, sharing the same rails, schedules and
+prediction objects (:class:`repro.comm.HaloPlan`,
+:func:`repro.comm.build_halo_schedule`).
+"""
+
+from repro.stencil.cg import CGResult, cg_solve, global_sums
+from repro.stencil.op import StencilOp
+
+__all__ = ["CGResult", "StencilOp", "cg_solve", "global_sums"]

@@ -1,0 +1,119 @@
+"""Conjugate gradients on a distributed stencil operator.
+
+Runs *inside* a fully-manual ``shard_map``: the matrix-vector product is
+:meth:`repro.stencil.op.StencilOp.apply` (halo exchange + local stencil),
+and the two global inner products per iteration ride the communicator's
+channelized ``all_reduce`` — the same rails, transports and striping rule
+as gradient reduction (:func:`global_sums` packs the partial dots into one
+flat buffer padded to the transport's alignment divisor).
+
+Two iteration modes:
+
+* ``tol`` given — a ``lax.while_loop`` runs until ``‖r‖² ≤ tol²·‖b‖²`` or
+  ``maxiter``; this is the production solver.
+* ``tol=None`` — exactly ``maxiter`` iterations as an unrolled Python loop:
+  deterministic HLO (no ``while``), which the dry-run's stencil suite and
+  the bitwise cross-schedule tests rely on (the roofline's wire-byte parser
+  cannot scale loop bodies by trip count).
+
+Because the operator's arithmetic is schedule-independent (see
+:mod:`repro.stencil.op`) and ``ppermute``/``all_reduce`` move exact values,
+every halo schedule produces bitwise-identical CG iterates.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topology import padded_size
+
+
+class CGResult(NamedTuple):
+    """Solution plus convergence record (all local-shard views)."""
+
+    x: jax.Array
+    iters: jax.Array        # iterations actually run
+    rel_residual: jax.Array  # ‖r‖ / ‖b‖ at exit (recurrence residual)
+
+
+def global_sums(comm, *vals):
+    """Sum scalars over the communicator's data axes on its channelized
+    ``all_reduce``: partial dots are stacked into one flat f32 buffer,
+    zero-padded to the transport's flat divisor, reduced, and unpacked.
+    ``comm=None`` (or a mesh with no data axes) means single-process use —
+    the values come back unchanged."""
+    if comm is None or not comm.axes:
+        return vals if len(vals) > 1 else vals[0]
+    vec = jnp.stack([jnp.asarray(v, jnp.float32) for v in vals])
+    n = padded_size(len(vals), comm.transport.flat_divisor(comm.axis_sizes))
+    vec = jnp.concatenate([vec, jnp.zeros((n - len(vals),), jnp.float32)])
+    out = comm.all_reduce([vec])[0]
+    return tuple(out[i] for i in range(len(vals))) if len(vals) > 1 \
+        else out[0]
+
+
+def _dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.vdot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def cg_solve(op, b: jax.Array, comm=None, *, x0: jax.Array | None = None,
+             tol: float | None = 1e-6, maxiter: int = 100,
+             schedule: str = "concurrent", chunks: int = 4,
+             channels: int = 0, matvec=None) -> CGResult:
+    """Solve ``op x = b`` (SPD ``op``) by conjugate gradients.
+
+    ``b`` is this rank's local shard; ``op`` is a :class:`StencilOp` (or any
+    object with the same ``apply`` signature).  ``schedule``/``chunks``/
+    ``channels`` select the halo schedule for every matvec; ``comm`` carries
+    the inner products (``None`` = local sums only).  Pass ``matvec`` to
+    override the product entirely — e.g. ``op.apply_reference`` for a
+    single-process solve on a global lattice, outside any ``shard_map``.
+    """
+    if matvec is None:
+        matvec = lambda v: op.apply(v, schedule=schedule, chunks=chunks,
+                                    channels=channels)
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - matvec(x) if x0 is not None else b
+    p = r
+    rs, bs = global_sums(comm, _dot(r, r), _dot(b, b))
+
+    def step(x, r, p, rs):
+        ap = matvec(p)
+        pap = global_sums(comm, _dot(p, ap))
+        # guarded divisions: identical bits while the denominators are
+        # positive (the while_loop exits before they are not); the unrolled
+        # mode iterates past convergence and must stall at 0 instead of NaN
+        alpha = jnp.where(pap > 0.0, rs / jnp.where(pap > 0.0, pap, 1.0), 0.0)
+        x = x + alpha * p.astype(jnp.float32)
+        r = r - alpha * ap.astype(jnp.float32)
+        rs_new = global_sums(comm, _dot(r, r))
+        beta = jnp.where(rs > 0.0, rs_new / jnp.where(rs > 0.0, rs, 1.0), 0.0)
+        p = r + beta * p
+        return x, r, p, rs_new
+
+    if tol is None:                     # fixed-iteration, unrolled HLO
+        x, r, p = x.astype(jnp.float32), r.astype(jnp.float32), \
+            p.astype(jnp.float32)
+        for _ in range(maxiter):
+            x, r, p, rs = step(x, r, p, rs)
+        iters = jnp.asarray(maxiter, jnp.int32)
+    else:
+        limit = jnp.asarray(tol * tol, jnp.float32) * bs
+
+        def cond(state):
+            k, _, _, _, rs = state
+            return jnp.logical_and(k < maxiter, rs > limit)
+
+        def body(state):
+            k, x, r, p, rs = state
+            x, r, p, rs = step(x, r, p, rs)
+            return k + 1, x, r, p, rs
+
+        iters, x, r, p, rs = jax.lax.while_loop(
+            cond, body, (jnp.asarray(0, jnp.int32), x.astype(jnp.float32),
+                         r.astype(jnp.float32), p.astype(jnp.float32), rs))
+    rel = jnp.sqrt(rs) / jnp.maximum(jnp.sqrt(bs), 1e-30)
+    return CGResult(x=x.astype(b.dtype), iters=iters, rel_residual=rel)

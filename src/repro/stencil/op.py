@@ -1,0 +1,179 @@
+"""Wilson-like covariant stencil operator over an N-D Cartesian mesh.
+
+The operator is the 2·d·w-point nearest-neighbour matrix the paper's QCD
+workload (Grid's Dslash) applies between halo exchanges:
+
+    (A x)[i] = (mass + 2 Σ_d κ_d w_d) x[i]
+               − Σ_d κ_d Σ_{s=1..w_d} ( x[i − s e_d] + x[i + s e_d] )
+
+over a periodic global lattice, with per-direction hopping weights ``κ_d``
+and face width ``w_d`` (= ``HaloSpec.halo``).  The matrix is symmetric, and
+strictly diagonally dominant — hence SPD — whenever ``mass > 0`` and every
+``κ_d > 0``, which is what lets conjugate gradients (:mod:`repro.stencil.cg`)
+drive it.
+
+The apply is written as an **interior/boundary split** so the ``overlap``
+halo schedule has compute to hide transfers under: each direction's
+neighbour-sum is first computed from purely local data (zero halos) — valid
+on the interior, no data dependency on any ``ppermute`` — and the two
+``halo``-wide boundary slabs are then *overwritten* with values recomputed
+from the received faces.  Every site's value is produced by the same
+floating-point expression whichever path writes it, and the communication
+schedule only reorders exact ``ppermute`` data movement — the operator's
+*arithmetic* is schedule-independent by construction.  One backend caveat:
+XLA is free to fuse the (schedule-dependent) exchange graph into the
+compute and contract mul+add chains to FMAs differently per module, which
+can move boundary sites by an ulp between schedules; the distributed tests
+therefore assert *bitwise* identity with the fusion pass pinned off
+(``--xla_disable_hlo_passes=fusion``) and tolerance-level identity under
+default flags.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.halo import HaloSpec, halo_exchange
+
+
+def _neighbour_sum(xc: jax.Array, start: int, count: int, width: int,
+                   dim: int) -> jax.Array:
+    """Σ_{s=1..width} (xc[i−s] + xc[i+s]) for sites [start, start+count) of
+    the padded array ``xc`` along ``dim``.  Accumulation order is fixed
+    (ascending ``s``, minus then plus) so every caller produces bitwise
+    identical values for the same inputs."""
+    acc = None
+    for s in range(1, width + 1):
+        a = lax.slice_in_dim(xc, start - s, start - s + count, axis=dim)
+        b = lax.slice_in_dim(xc, start + s, start + s + count, axis=dim)
+        t = a + b
+        acc = t if acc is None else acc + t
+    return acc
+
+
+def _zeros_face(x: jax.Array, dim: int, width: int) -> jax.Array:
+    shape = list(x.shape)
+    shape[dim] = width
+    return jnp.zeros(shape, x.dtype)
+
+
+@dataclass(frozen=True)
+class StencilOp:
+    """Wilson-like operator: ``specs`` name the stencil directions (array
+    dim × mesh axis × face width), ``hopping`` the per-direction κ.  With
+    no ``hopping`` given every direction gets ``κ = 1 / (4 · n_dirs)`` —
+    comfortably SPD for any positive ``mass``."""
+
+    specs: tuple[HaloSpec, ...]
+    mass: float = 1.0
+    hopping: tuple[float, ...] = ()
+
+    def __post_init__(self):
+        if not self.specs:
+            raise ValueError("StencilOp needs at least one direction spec")
+        if self.hopping and len(self.hopping) != len(self.specs):
+            raise ValueError(
+                f"{len(self.hopping)} hopping weights for "
+                f"{len(self.specs)} direction specs")
+
+    @property
+    def kappas(self) -> tuple[float, ...]:
+        if self.hopping:
+            return self.hopping
+        return (1.0 / (4.0 * len(self.specs)),) * len(self.specs)
+
+    @property
+    def diag(self) -> float:
+        """Diagonal coefficient; exceeds the off-diagonal row sum by
+        ``mass``, so ``mass > 0`` makes the operator SPD."""
+        return self.mass + 2.0 * sum(k * s.halo
+                                     for k, s in zip(self.kappas, self.specs))
+
+    # -- local compute -------------------------------------------------------
+
+    def _dir_sum(self, x: jax.Array, lo: jax.Array, hi: jax.Array,
+                 spec: HaloSpec) -> jax.Array:
+        """One direction's neighbour-sum from local data + received faces.
+
+        Interior first (zero halos — issuable before any transfer lands),
+        then the two boundary slabs overwritten from the real halos.  Falls
+        back to the directly-padded form when the local extent is too small
+        to keep the slabs disjoint (``n < 2·halo``)."""
+        d, w, n = spec.dim, spec.halo, x.shape[spec.dim]
+        if n < 2 * w:
+            xc = jnp.concatenate([lo, x, hi], axis=d)
+            return _neighbour_sum(xc, w, n, w, d)
+        z = _zeros_face(x, d, w)
+        s0 = _neighbour_sum(jnp.concatenate([z, x, z], axis=d), w, n, w, d)
+        # lo slab: sites [0, w) need the lo halo and x[0, 2w)
+        xlo = jnp.concatenate([lo, lax.slice_in_dim(x, 0, 2 * w, axis=d)],
+                              axis=d)
+        slab_lo = _neighbour_sum(xlo, w, w, w, d)
+        # hi slab: sites [n-w, n) need x[n-2w, n) and the hi halo; site n-w
+        # sits at offset w of the 3w-long window
+        xhi = jnp.concatenate([lax.slice_in_dim(x, n - 2 * w, n, axis=d), hi],
+                              axis=d)
+        slab_hi = _neighbour_sum(xhi, w, w, w, d)
+        s0 = lax.dynamic_update_slice_in_dim(s0, slab_lo, 0, axis=d)
+        return lax.dynamic_update_slice_in_dim(s0, slab_hi, n - w, axis=d)
+
+    def apply_halos(self, x: jax.Array, halos: dict) -> jax.Array:
+        """Apply the operator given already-received halos (the compute half
+        of :meth:`apply`; schedule-independent by construction).
+
+        ``x`` and each received face pass through their own
+        ``optimization_barrier`` asking XLA not to fuse the
+        (schedule-dependent) exchange graph into the (schedule-independent)
+        compute; one barrier *per array* keeps the interior compute
+        (downstream of ``x`` only) free to run while faces are still in
+        flight.  The CPU backend strips these barriers — hence the fusion
+        caveat in the module docstring — but backends that honour them get a
+        hard fence between exchange and compute.
+        """
+        x = lax.optimization_barrier(x)
+        halos = {k: lax.optimization_barrier(v) for k, v in halos.items()}
+        y = jnp.asarray(self.diag, x.dtype) * x
+        for spec, kappa in zip(self.specs, self.kappas):
+            s = self._dir_sum(x, halos[(spec.axis, "-")],
+                              halos[(spec.axis, "+")], spec)
+            y = y - jnp.asarray(kappa, x.dtype) * s
+        return y
+
+    # -- distributed apply (inside a fully-manual shard_map) -----------------
+
+    def apply(self, x: jax.Array, *, schedule: str = "concurrent",
+              chunks: int = 4, channels: int = 0) -> jax.Array:
+        """Halo exchange + apply on one local shard.  The schedule decides
+        how the faces move (see :data:`repro.comm.HALO_SCHEDULES`); the
+        arithmetic is identical for all of them."""
+        halos = halo_exchange(x, self.specs, schedule=schedule,
+                              chunks=chunks, channels=channels)
+        return self.apply_halos(x, halos)
+
+    # -- references (single process, global lattice) -------------------------
+
+    def apply_reference(self, xg: jax.Array) -> jax.Array:
+        """Dense-free reference on a *global* periodic lattice via
+        ``jnp.roll`` — what the distributed apply must reproduce."""
+        y = self.diag * xg
+        for spec, kappa in zip(self.specs, self.kappas):
+            for s in range(1, spec.halo + 1):
+                y = y - kappa * (jnp.roll(xg, s, axis=spec.dim)
+                                 + jnp.roll(xg, -s, axis=spec.dim))
+        return y
+
+    def dense_matrix(self, shape: Sequence[int]) -> jax.Array:
+        """The operator as an explicit (N, N) matrix over a global lattice of
+        ``shape`` — the ``jnp.linalg`` reference the CG property tests solve
+        against.  Only sensible for tiny lattices."""
+        n = 1
+        for s in shape:
+            n *= int(s)
+        eye = jnp.eye(n, dtype=jnp.float32).reshape((n,) + tuple(shape))
+        cols = jax.vmap(self.apply_reference)(eye)
+        return cols.reshape(n, n).T

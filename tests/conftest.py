@@ -20,13 +20,17 @@ def rng():
     return np.random.RandomState(0)
 
 
-def run_distributed(script: str, n_devices: int = 8, timeout: int = 560) -> str:
+def run_distributed(script: str, n_devices: int = 8, timeout: int = 560,
+                    extra_flags: str = "") -> str:
     """Run ``script`` in a fresh interpreter with N host devices; returns
-    stdout.  Raises on non-zero exit."""
+    stdout.  Raises on non-zero exit.  ``extra_flags`` appends to XLA_FLAGS
+    (e.g. ``--xla_disable_hlo_passes=fusion`` for the bitwise cross-schedule
+    stencil tests, which must exclude backend fusion heuristics)."""
     import subprocess
 
     env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices}"
+                        + (f" {extra_flags}" if extra_flags else ""))
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run([sys.executable, "-c", script], env=env,
                           capture_output=True, text=True, timeout=timeout)

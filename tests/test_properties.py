@@ -98,6 +98,66 @@ def test_halo_bytes_formula(shape, halo):
     assert b == 2 * halo * shape[1] * 4
 
 
+_HALO_DIMS = st.integers(1, 3).flatmap(
+    lambda nd: st.tuples(
+        st.tuples(*[st.integers(2, 8) for _ in range(nd)]),
+        st.tuples(*[st.integers(1, 2) for _ in range(nd)])))
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=_HALO_DIMS,
+       schedule=st.sampled_from(["sequential", "concurrent", "chunked",
+                                 "overlap"]),
+       channels=st.integers(0, 4), chunks=st.integers(1, 4),
+       extra=st.integers(1, 6))
+def test_build_halo_schedule_invariants(dims, schedule, channels, chunks,
+                                        extra):
+    """Every direction's payload issues exactly once, channels stay in
+    range, overlap_fraction in [0, 1], and chunking conserves bytes."""
+    from repro.comm import build_halo_schedule
+    from repro.core.halo import HaloSpec, halo_bytes
+
+    shape, halos = dims
+    shape = shape + (extra,)                      # one unsharded dim
+    specs = [HaloSpec(f"ax{d}", d, h) for d, h in enumerate(halos)]
+    s = build_halo_schedule(specs, shape, schedule=schedule,
+                            channels=channels, chunks=chunks)
+    seen = sorted(b for slot in s.slots for b in slot.bucket_ids)
+    assert seen == list(range(s.n_buckets))
+    assert all(slot.phase == 0 for slot in s.slots)
+    limit = (1 if schedule == "sequential"
+             else channels if (schedule == "overlap" and channels >= 1)
+             else s.n_buckets)
+    assert all(0 <= slot.channel < limit for slot in s.slots)
+    assert 0.0 <= s.overlap_fraction <= 1.0
+    assert (s.overlap_fraction > 0.0) == (
+        schedule == "overlap"
+        and all(n > 2 * sp.halo for n, sp in zip(shape, specs)))
+    assert sum(s.bucket_sizes) == halo_bytes(shape, specs, 4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=st.tuples(st.integers(3, 6), st.integers(3, 6)),
+       mass=st.floats(0.1, 2.0), seed=st.integers(0, 2**16),
+       halo=st.integers(1, 2))
+def test_cg_converges_to_linalg_solution(shape, mass, seed, halo):
+    """CG on any SPD Wilson-like operator reaches the dense
+    ``jnp.linalg.solve`` solution of the same periodic system."""
+    from repro.stencil import StencilOp, cg_solve
+
+    specs = tuple(HaloSpec(f"ax{d}", d, halo) for d in range(len(shape)))
+    op = StencilOp(specs=specs, mass=mass)
+    A = np.asarray(op.dense_matrix(shape))
+    assert np.linalg.eigvalsh(A).min() > 0.0        # SPD by construction
+    rng = np.random.RandomState(seed)
+    b = jnp.asarray(rng.randn(*shape).astype(np.float32))
+    res = cg_solve(op, b, None, tol=1e-7, maxiter=500,
+                   matvec=op.apply_reference)
+    xref = np.asarray(jnp.linalg.solve(jnp.asarray(A), b.reshape(-1)))
+    assert float(res.rel_residual) < 1e-6
+    assert np.abs(np.asarray(res.x).reshape(-1) - xref).max() < 1e-3
+
+
 @settings(max_examples=20, deadline=None)
 @given(chunks=st.integers(1, 4), bidi=st.booleans(),
        codec=st.sampled_from([None, "int8"]))
