@@ -1,9 +1,13 @@
-"""End-to-end solver benchmark: CG on the Wilson-like stencil operator,
-halo schedule × channels sweep — the paper's Tables V/VI workload driven to
-convergence instead of a single operator application.
+"""End-to-end solver benchmark: the comm-avoiding CG family on the
+Wilson-like stencil operator — ``solver ∈ {cg, pipelined, sstep} ×
+precond ∈ {none, eo}`` over halo schedules, driven to convergence.  The
+``reductions`` column is the predicted inner-product collective count
+(:func:`repro.stencil.predicted_reduction_collectives`): the α-latency
+budget each variant actually pays, which is the paper's Tables V/VI story
+applied to the solver instead of the exchange.
 
-``python -m benchmarks.bench_cg --dry`` runs one tiny lattice per schedule
-and asserts convergence (the CI stencil smoke job).
+``python -m benchmarks.bench_cg --dry`` runs one tiny lattice over the full
+solver × precond grid and asserts convergence (the CI solver smoke job).
 """
 
 from __future__ import annotations
@@ -17,47 +21,59 @@ import numpy as np
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro import compat
-from repro.comm import CommConfig, Communicator, HALO_SCHEDULES
+from repro.comm import CommConfig, Communicator
 from repro.core.halo import HaloSpec
-from repro.stencil import StencilOp, cg_solve
+from repro.stencil import StencilOp, predicted_reduction_collectives, solve
 
 mesh = compat.make_mesh((2, 2, 2), ("x", "y", "z"))
 SPECS = (HaloSpec("x", 0), HaloSpec("y", 1), HaloSpec("z", 2))
 op = StencilOp(specs=SPECS, mass=0.5)
 
-def solver(comm, schedule, channels, tol, maxiter):
+def solver_fn(comm, solver, precond, schedule, channels, tol, maxiter):
     def run(b):
-        r = cg_solve(op, b, comm, tol=tol, maxiter=maxiter, schedule=schedule,
-                     chunks=comm.halo_chunks, channels=channels)
+        r = solve(op, b, comm, solver=solver, precond=precond, s=SSTEP_S,
+                  tol=tol, maxiter=maxiter, schedule=schedule,
+                  chunks=comm.halo_chunks, channels=channels)
         return r.x, r.iters, r.rel_residual
     return jax.jit(compat.shard_map(run, mesh=mesh,
                                     in_specs=P("x", "y", "z", None),
                                     out_specs=(P("x", "y", "z", None), P(), P()),
                                     check_vma=False))
 
-print("schedule,channels,local_vol,iters,rel_residual,us_per_solve,us_per_iter")
+print("solver,precond,schedule,channels,local_vol,iters,reductions,"
+      "rel_residual,us_per_solve,us_per_iter")
 rng = np.random.RandomState(0)
 for L in LATTICES:
     b = jnp.asarray(rng.randn(2*L, 2*L, 2*L, C).astype(np.float32))
-    for schedule in HALO_SCHEDULES:
-        for channels in CHANNELS:
-            comm = Communicator(mesh, CommConfig(
-                transport="psum", data_axes=("x", "y", "z"),
-                channels=channels))
-            fn = solver(comm, schedule, channels, TOL, MAXITER)
-            x, iters, rel = jax.block_until_ready(fn(b))
-            assert float(rel) < TOL, (schedule, channels, float(rel))
-            sec = time_call(fn, b)
-            it = max(int(iters), 1)
-            print(f"{schedule},{channels},{L}^3,{int(iters)},"
-                  f"{float(rel):.2e},{sec*1e6:.1f},{sec*1e6/it:.1f}")
+    for solver in SOLVERS:
+        for precond in PRECONDS:
+            for schedule in SCHEDULES:
+                for channels in CHANNELS:
+                    comm = Communicator(mesh, CommConfig(
+                        transport="psum", data_axes=("x", "y", "z"),
+                        channels=channels))
+                    fn = solver_fn(comm, solver, precond, schedule,
+                                   channels, TOL, MAXITER)
+                    x, iters, rel = jax.block_until_ready(fn(b))
+                    assert float(rel) < TOL, \
+                        (solver, precond, schedule, channels, float(rel))
+                    sec = time_call(fn, b)
+                    it = max(int(iters), 1)
+                    red = predicted_reduction_collectives(solver, it, s=SSTEP_S)
+                    print(f"{solver},{precond},{schedule},{channels},{L}^3,"
+                          f"{int(iters)},{red},{float(rel):.2e},"
+                          f"{sec*1e6:.1f},{sec*1e6/it:.1f}")
 print("CG_BENCH_OK")
 """
 
 SWEEP_HEADER = """
 LATTICES = [8, 12]
 C = 12
-CHANNELS = [1, 2, 4]
+SOLVERS = ["cg", "pipelined", "sstep"]
+PRECONDS = ["none", "eo"]
+SCHEDULES = ["concurrent", "overlap"]
+CHANNELS = [2]
+SSTEP_S = 4
 TOL = 1e-5
 MAXITER = 200
 """
@@ -65,7 +81,11 @@ MAXITER = 200
 DRY_HEADER = """
 LATTICES = [4]
 C = 4
+SOLVERS = ["cg", "pipelined", "sstep"]
+PRECONDS = ["none", "eo"]
+SCHEDULES = ["concurrent"]
 CHANNELS = [2]
+SSTEP_S = 4
 TOL = 1e-5
 MAXITER = 100
 """

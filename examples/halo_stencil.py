@@ -1,10 +1,15 @@
 """The paper's first workload end-to-end: a Wilson-like stencil operator
-driven by CG to convergence, comparing all four halo-exchange schedules
-(sequential / concurrent / chunked / overlap) on one Cartesian mesh.
+driven to convergence by the comm-avoiding CG family — ``solver ∈ {cg,
+pipelined, sstep} × precond ∈ {none, eo}`` — with the halo exchange on the
+``overlap`` schedule.  The ``reductions`` column counts the latency-bound
+inner-product all-reduces each variant pays: classic CG's ``2·iters+1``
+drops to ``iters`` (pipelined, reduction hidden under the matvec) to
+``ceil(iters/s)`` (s-step, one fused reduction per block), and even-odd
+preconditioning roughly halves ``iters`` on top.
 
     PYTHONPATH=src python examples/halo_stencil.py
 
-Run with more fake devices to see the schedules diverge:
+Run with more fake devices to see the schedules and variants diverge:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/halo_stencil.py
@@ -18,9 +23,10 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.comm import CommConfig, Communicator, HALO_SCHEDULES
+from repro.comm import CommConfig, Communicator
 from repro.core.halo import HaloSpec
-from repro.stencil import StencilOp, cg_solve
+from repro.stencil import (PRECONDS, SOLVERS, StencilOp,
+                           predicted_reduction_collectives, solve)
 
 
 def main() -> None:
@@ -28,43 +34,44 @@ def main() -> None:
     mesh = compat.make_mesh((n,), ("x",))
     L, C = 24, 12                        # local extent, spinor-ish components
     specs = (HaloSpec("x", 0),)
-    op = StencilOp(specs=specs, mass=0.5)
+    op = StencilOp(specs=specs, mass=0.2)
     comm = Communicator(mesh, CommConfig(transport="psum", data_axes=("x",),
                                          channels=2))
     rng = np.random.RandomState(0)
     b = jnp.asarray(rng.randn(n * L, L, C).astype(np.float32))
 
-    hplan = comm.halo_plan((L, L, C), specs)
+    hplan = comm.halo_plan((L, L, C), specs, schedule="overlap")
     print(f"devices={n}  local={L}x{L}x{C}  halo bytes/exchange="
-          f"{hplan.bytes_per_device:.0f}\n")
-    print(f"{'schedule':12s} {'iters':>5s} {'rel_resid':>10s} "
-          f"{'ms/solve':>9s} {'overlap_frac':>12s}")
+          f"{hplan.bytes_per_device:.0f}  "
+          f"overlap_frac={hplan.overlap_fraction:.2f}\n")
+    print(f"{'solver':10s} {'precond':8s} {'iters':>5s} {'reductions':>10s} "
+          f"{'rel_resid':>10s} {'ms/solve':>9s}")
 
     sols = {}
-    for sched in HALO_SCHEDULES:
-        def run(bl, s=sched):
-            r = cg_solve(op, bl, comm, tol=1e-6, maxiter=200, schedule=s,
-                         chunks=2, channels=2)
-            return r.x, r.iters, r.rel_residual
-        fn = jax.jit(compat.shard_map(run, mesh=mesh,
-                                      in_specs=P("x", None, None),
-                                      out_specs=(P("x", None, None), P(), P()),
-                                      check_vma=False))
-        x, iters, rel = jax.block_until_ready(fn(b))
-        t0 = time.time()
-        for _ in range(3):
-            jax.block_until_ready(fn(b))
-        dt = (time.time() - t0) / 3
-        sols[sched] = np.asarray(x)
-        frac = comm.halo_schedule((L, L, C), specs,
-                                  schedule=sched).overlap_fraction
-        print(f"{sched:12s} {int(iters):5d} {float(rel):10.2e} "
-              f"{dt*1e3:9.1f} {frac:12.2f}")
+    for solver in SOLVERS:
+        for precond in PRECONDS:
+            def run(bl, sv=solver, pc=precond):
+                r = solve(op, bl, comm, solver=sv, precond=pc, s=4, tol=1e-5,
+                          maxiter=300, schedule="overlap", chunks=2,
+                          channels=2)
+                return r.x, r.iters, r.rel_residual
+            fn = jax.jit(compat.shard_map(
+                run, mesh=mesh, in_specs=P("x", None, None),
+                out_specs=(P("x", None, None), P(), P()), check_vma=False))
+            x, iters, rel = jax.block_until_ready(fn(b))
+            t0 = time.time()
+            for _ in range(3):
+                jax.block_until_ready(fn(b))
+            dt = (time.time() - t0) / 3
+            sols[(solver, precond)] = np.asarray(x)
+            red = predicted_reduction_collectives(solver, int(iters), s=4)
+            print(f"{solver:10s} {precond:8s} {int(iters):5d} {red:10d} "
+                  f"{float(rel):10.2e} {dt*1e3:9.1f}")
 
-    worst = max(float(np.abs(sols[s] - sols["sequential"]).max())
-                for s in HALO_SCHEDULES)
-    print(f"\nmax |x_sched - x_sequential| across schedules: {worst:.2e}")
-    ax = op.apply_reference(jnp.asarray(sols["overlap"]))
+    ref = sols[("cg", "none")]
+    worst = max(float(np.abs(s - ref).max()) for s in sols.values())
+    print(f"\nmax |x_variant - x_cg| across the family: {worst:.2e}")
+    ax = op.apply_reference(jnp.asarray(ref))
     print(f"final check ‖A x - b‖/‖b‖ = "
           f"{float(jnp.linalg.norm(ax - b) / jnp.linalg.norm(b)):.2e}")
 

@@ -14,8 +14,9 @@ remains as a deprecated shim over this package.
 
 from repro.comm.api import (CommConfig, Communicator, POLICY_TO_TRANSPORT,
                             comm_config_from_policy)
-from repro.comm.plan import (ChannelAssignment, CommPlan, HaloChannel,
-                             HaloPlan, assign_channels)
+from repro.comm.plan import (ALPHA_S, ChannelAssignment, CommPlan,
+                             HaloChannel, HaloPlan, LatencyModel,
+                             assign_channels)
 from repro.comm.registry import (Transport, TransportSpec, get_transport,
                                  list_transports, register_transport,
                                  transport_specs)
@@ -25,9 +26,10 @@ from repro.comm.schedule import (CommSchedule, HALO_SCHEDULES, IssueSlot,
                                  halo_units)
 
 __all__ = [
-    "ChannelAssignment", "CommConfig", "CommPlan", "CommSchedule",
+    "ALPHA_S", "ChannelAssignment", "CommConfig", "CommPlan", "CommSchedule",
     "Communicator", "HALO_SCHEDULES", "HaloChannel", "HaloPlan", "IssueSlot",
-    "POLICY_TO_TRANSPORT", "SCHEDULE_POLICIES", "assign_channels",
+    "LatencyModel", "POLICY_TO_TRANSPORT", "SCHEDULE_POLICIES",
+    "assign_channels",
     "build_halo_schedule", "build_schedule", "comm_config_from_policy",
     "get_transport", "halo_interior_fraction", "halo_units",
     "list_transports", "register_transport", "Transport", "TransportSpec",

@@ -143,10 +143,13 @@ class Communicator:
         wire_per_elem = codec.wire_bytes(n) / n
         bytes_dev = self.transport.predicted_bytes_per_device(
             bplan.used_elems, self.axis_sizes)
+        msgs = (self.transport.predicted_messages_per_device(self.axis_sizes)
+                * bplan.n_buckets)
         return CommPlan(transport=self.cfg.transport, axes=self.axes,
                         axis_sizes=self.axis_sizes, bucket_plan=bplan,
                         channels=chans, wire_bytes_per_elem=wire_per_elem,
-                        bytes_per_device=bytes_dev)
+                        bytes_per_device=bytes_dev,
+                        messages_per_device=msgs)
 
     # -- channelized execution (inside a fully-manual shard_map) -------------
 

@@ -19,6 +19,38 @@ from typing import Sequence
 
 from repro.core.bucketing import BucketPlan
 
+# Per-message launch + small-message latency cost, seconds.  The paper's
+# core observation is that once the wire runs near line rate, per-message
+# overhead — not bandwidth — dominates small collectives; 1.5 µs is the
+# order of an Omni-Path/ICI small-message one-way latency and makes the
+# α term visible exactly where the paper says it matters (CG inner
+# products, tiny gradient buckets) without perturbing bulk-transfer cells.
+ALPHA_S = 1.5e-6
+
+# Per-link one-direction bandwidth, bytes/s.  Single source for both β
+# terms: :class:`LatencyModel` here and ``repro.launch.roofline.ICI_BW``.
+LINK_BANDWIDTH = 50e9
+
+
+@dataclass(frozen=True)
+class LatencyModel:
+    """α/β cost model of one device's collective traffic:
+
+        t_collective = α · messages + bytes / bandwidth
+
+    ``messages`` counts discrete network operations whose launch latency
+    cannot be amortised (ring hops, ``ppermute`` payloads); ``bytes`` is
+    the per-device wire-byte total the bandwidth term amortises.  The β
+    term alone is what the roofline used before solver variants made the
+    message *count* a first-class design axis (2 vs 1 vs 1/s reductions
+    per CG iteration)."""
+
+    alpha_s: float = ALPHA_S
+    bandwidth: float = LINK_BANDWIDTH
+
+    def collective_seconds(self, messages: float, nbytes: float) -> float:
+        return self.alpha_s * float(messages) + float(nbytes) / self.bandwidth
+
 
 @dataclass(frozen=True)
 class ChannelAssignment:
@@ -58,6 +90,7 @@ class CommPlan:
     channels: tuple[ChannelAssignment, ...]
     wire_bytes_per_elem: float     # codec/wire-dtype bytes per element
     bytes_per_device: float        # predicted all-reduce wire bytes/device
+    messages_per_device: float = 0.0  # discrete sends/device (α latency term)
 
     @property
     def n_buckets(self) -> int:
@@ -101,7 +134,14 @@ class CommPlan:
             "wire_bytes_per_elem": self.wire_bytes_per_elem,
             "n_channels": float(self.n_channels),
             "channel_imbalance": self.channel_imbalance,
+            "messages_per_device": self.messages_per_device,
         }
+
+    def predicted_collective_seconds(self, model: LatencyModel = LatencyModel()
+                                     ) -> float:
+        """α·messages + bytes/bw for one reduction of this plan."""
+        return model.collective_seconds(self.messages_per_device,
+                                        self.bytes_per_device)
 
     def describe(self) -> dict:
         """JSON-friendly summary for the dry-run report."""
@@ -164,6 +204,18 @@ class HaloPlan:
         return float(sum(self.unit_bytes))
 
     @property
+    def messages_per_device(self) -> float:
+        """α-term message count: each unit is exactly one ``ppermute``
+        payload, i.e. one discrete send per device per exchange."""
+        return float(self.n_units)
+
+    def predicted_collective_seconds(self, model: LatencyModel = LatencyModel()
+                                     ) -> float:
+        """α·messages + bytes/bw for one halo exchange of this plan."""
+        return model.collective_seconds(self.messages_per_device,
+                                        self.bytes_per_device)
+
+    @property
     def channel_imbalance(self) -> float:
         """max/mean channel load (1.0 = perfectly striped)."""
         loads = [a.bytes for a in self.channels]
@@ -184,6 +236,7 @@ class HaloPlan:
             "channels": [{"channel": a.channel, "units": list(a.units),
                           "bytes": a.bytes} for a in self.channels],
             "bytes_per_device": self.bytes_per_device,
+            "messages_per_device": self.messages_per_device,
             "channel_imbalance": self.channel_imbalance,
             "overlap_fraction": self.overlap_fraction,
         }

@@ -160,6 +160,16 @@ class Transport:
             total += 2 * (p - 1) / max(p, 1) * n_elems * wire_per_elem
         return total
 
+    def predicted_messages_per_device(self, axis_sizes: Sequence[int]
+                                      ) -> float:
+        """Discrete sends per device for one all-reduce of one bucket —
+        the α term of :class:`repro.comm.plan.LatencyModel`.  Baseline: a
+        single ring per axis pays ``(p−1)`` reduce-scatter plus ``(p−1)``
+        all-gather hops; explicit ring transports multiply by their
+        chunk × direction parallel chains (more, smaller messages — same
+        bytes), see :class:`RingTransport`."""
+        return float(sum(2 * (p - 1) for p in axis_sizes))
+
 
 @register_transport(
     "ring", supports_rs=True,
@@ -170,6 +180,12 @@ class RingTransport(Transport):
 
     def all_reduce(self, flat: jax.Array) -> jax.Array:
         return ring_lib.flat_all_reduce(flat, self.axes, self.ring_cfg)
+
+    def predicted_messages_per_device(self, axis_sizes: Sequence[int]
+                                      ) -> float:
+        mult = self.ring_cfg.chunks * (2 if self.ring_cfg.bidirectional
+                                       else 1)
+        return super().predicted_messages_per_device(axis_sizes) * mult
 
     def reduce_scatter(self, flat: jax.Array) -> jax.Array:
         for axis in self.ordered_axes:
@@ -217,3 +233,12 @@ class PsumTransport(Transport):
                                    axis_sizes: Sequence[int]) -> float:
         # assume the vendor collective is also a bandwidth-optimal ring
         return super().predicted_bytes_per_device(n_elems, axis_sizes)
+
+    def predicted_messages_per_device(self, axis_sizes: Sequence[int]
+                                      ) -> float:
+        # one fused op over the joint group: a ring-equivalent hop count
+        # over the whole world, not one ring per axis
+        world = 1
+        for p in axis_sizes:
+            world *= p
+        return float(2 * (world - 1)) if world > 1 else 0.0

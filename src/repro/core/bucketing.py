@@ -74,7 +74,18 @@ class BucketPlan:
 
 
 class GradientBucketer:
-    """Greedy size-capped packer with a persistent plan cache."""
+    """Greedy size-capped packer with a persistent plan cache.
+
+    Leaves pack into buckets in pytree order until the next leaf would
+    overflow ``bucket_bytes``; each bucket is then padded up to
+    ``pad_multiple`` elements.  **Oversized-leaf invariant**: a leaf larger
+    than ``bucket_bytes`` is *never split* — it becomes a singleton bucket
+    of its own (padded) size, and the next leaf always starts a fresh
+    bucket.  Leaves stay contiguous ranges of exactly one bucket, which the
+    debucketize slicing, the reduce-scatter ownership layout, and the
+    schedule's bucket-id indexing all rely on; ``bucket_bytes`` is a
+    *target*, not a bound.
+    """
 
     def __init__(self, bucket_bytes: int = 4 * 2**20,
                  pad_multiple: int = LANE_MULTIPLE,

@@ -44,6 +44,28 @@ from repro.runtime.train_step import (TrainStepConfig, build_step_schedule,
 HBM_PER_CHIP = 16 * 2**30
 
 
+def overrides_fingerprint(overrides: dict | None) -> str:
+    """Deterministic, order-insensitive fingerprint of a cell's overrides.
+
+    Folded into the cache key by :func:`cell_key` so that re-running with a
+    different ``--accum-policy`` / schedule / solver override can never be
+    served a stale cached cell (the key used to be ``tag|arch|shape|mesh``
+    only, which silently ignored override changes)."""
+    if not overrides:
+        return ""
+    items = sorted((str(k), json.dumps(v, sort_keys=True, default=str))
+                   for k, v in overrides.items())
+    return ",".join(f"{k}={v}" for k, v in items)
+
+
+def cell_key(tag: str, arch: str, shape: str, mesh_label: str,
+             overrides: dict | None = None) -> str:
+    """Cache key of one dry-run cell in the output JSON."""
+    base = f"{tag}|{arch}|{shape}|{mesh_label}"
+    fp = overrides_fingerprint(overrides)
+    return f"{base}|ov[{fp}]" if fp else base
+
+
 def _abstract_batch(model, shape_cfg):
     return model.input_specs(shape_cfg)
 
@@ -209,6 +231,7 @@ def analyse(lowered, n_dev: int, model, shape_cfg,
         wire_bytes_per_device=stats.wire_bytes,
         model_flops=mf,
         overlap_fraction=overlap_fraction,
+        messages_per_device=stats.messages,
     )
     mem = {
         "argument_gb": ma.argument_size_in_bytes / 2**30,
@@ -262,19 +285,32 @@ STENCIL_MESH = {"single": ((4, 8, 8), 256), "multi": ((8, 8, 8), 512)}
 
 def run_stencil_cell(L: int, schedule: str, multi_pod: bool, *,
                      channels: int = 2, halo: int = 1, components: int = 12,
-                     cg_iters: int = 3) -> dict:
-    """One stencil-suite cell: lower + compile ``cg_iters`` unrolled CG
-    iterations on a Wilson-like operator over a 3-D Cartesian mesh, and
-    check the :class:`~repro.comm.HaloPlan` prediction against the
-    ``collective-permute`` bytes parsed from the optimized HLO (each CG
-    iteration is exactly one halo exchange; inner products ride ``psum``
-    all-reduces, so the two op kinds separate cleanly in the parse)."""
+                     cg_iters: int = 3, solver: str = "cg",
+                     precond: str = "none", sstep_s: int = 4) -> dict:
+    """One stencil-suite cell: lower + compile ``cg_iters`` unrolled
+    iterations of one ``solver × precond`` variant on a Wilson-like operator
+    over a 3-D Cartesian mesh, then check the prediction layer against the
+    optimized HLO on *two* axes:
+
+    * **bytes** — :class:`~repro.comm.HaloPlan` payloads vs the parsed
+      ``collective-permute`` bytes (halo exchanges scale with the variant:
+      even-odd hops twice per matvec plus projection/reconstruction);
+    * **counts** — :func:`repro.stencil.predicted_reduction_collectives` /
+      :func:`~repro.stencil.predicted_halo_exchanges` vs the parsed
+      ``all-reduce`` / ``collective-permute`` op counts.  The count check is
+      the latency-model (α·messages) analogue of the byte check: it is what
+      distinguishes classic CG's ``2·iters+1`` reductions from pipelined's
+      ``iters`` and s-step's ``ceil(iters/s)``.
+
+    Inner products ride ``psum`` all-reduces, so the two op kinds separate
+    cleanly in the parse."""
     from jax.sharding import PartitionSpec as P
 
     from repro import compat
     from repro.comm import CommConfig, Communicator
     from repro.core.halo import HaloSpec
-    from repro.stencil import StencilOp, cg_solve
+    from repro.stencil import (StencilOp, predicted_halo_exchanges,
+                               predicted_reduction_collectives, solve)
 
     mesh_shape, n_dev = STENCIL_MESH["multi" if multi_pod else "single"]
     mesh = compat.make_mesh(mesh_shape, ("x", "y", "z"),
@@ -291,9 +327,9 @@ def run_stencil_cell(L: int, schedule: str, multi_pod: bool, *,
     hsched = comm.halo_schedule(local, specs, schedule=schedule)
 
     def run(b):
-        r = cg_solve(op, b, comm, tol=None, maxiter=cg_iters,
-                     schedule=schedule, chunks=comm.halo_chunks,
-                     channels=channels)
+        r = solve(op, b, comm, solver=solver, precond=precond, s=sstep_s,
+                  tol=None, maxiter=cg_iters, schedule=schedule,
+                  chunks=comm.halo_chunks, channels=channels)
         return r.x, r.rel_residual
 
     with mesh:
@@ -308,18 +344,29 @@ def run_stencil_cell(L: int, schedule: str, multi_pod: bool, *,
     if isinstance(ca, (list, tuple)):
         ca = ca[0] if ca else {}
     stats = collective_wire_bytes(compiled.as_text())
-    predicted = cg_iters * hplan.bytes_per_device
+    n_exchanges = predicted_halo_exchanges(solver, precond, cg_iters,
+                                           s=sstep_s)
+    n_reductions = predicted_reduction_collectives(solver, cg_iters,
+                                                   s=sstep_s)
+    predicted = n_exchanges * hplan.bytes_per_device
     measured = stats.op_bytes.get("collective-permute", 0.0)
+    pred_permutes = n_exchanges * hplan.n_units
+    hlo_permutes = stats.op_counts.get("collective-permute", 0)
+    hlo_reductions = stats.op_counts.get("all-reduce", 0)
     roof = Roofline(
         flops_per_device=float(ca.get("flops", 0.0)),
         hbm_bytes_per_device=float(ca.get("bytes accessed", 0.0)),
         wire_bytes_per_device=stats.wire_bytes,
         overlap_fraction=hsched.overlap_fraction,
+        messages_per_device=stats.messages,
     )
     return {
         "arch": "stencil",
         "shape": f"L{L}h{halo}",
         "schedule": schedule,
+        "solver": solver,
+        "precond": precond,
+        "sstep_s": sstep_s,
         "mesh": "x".join(str(s) for s in mesh_shape),
         "devices": n_dev,
         "compile_s": compile_s,
@@ -328,6 +375,11 @@ def run_stencil_cell(L: int, schedule: str, multi_pod: bool, *,
         "hlo_collective_permute_bytes": measured,
         "halo_bytes_rel_err": (abs(measured - predicted) / predicted
                                if predicted else None),
+        "predicted_halo_exchanges": n_exchanges,
+        "predicted_permute_collectives": pred_permutes,
+        "hlo_permute_collectives": hlo_permutes,
+        "predicted_reduction_collectives": n_reductions,
+        "hlo_reduction_collectives": hlo_reductions,
         "roofline": roof.as_dict(n_dev),
         "collectives": {"counts": stats.op_counts, "bytes": stats.op_bytes,
                         "while_loops": stats.while_loops},
@@ -337,49 +389,67 @@ def run_stencil_cell(L: int, schedule: str, multi_pod: bool, *,
 
 
 def run_stencil_suite(args, meshes, cache: dict) -> None:
-    """The ``--suite stencil`` grid: lattice volume × halo schedule × mesh.
-    Cells land in the same cache/out file as the train suite."""
+    """The ``--suite stencil`` grid: lattice × halo schedule × solver ×
+    precond × mesh.  Cells land in the same cache/out file as the train
+    suite, keyed through :func:`cell_key` so every grid knob is part of
+    the cache identity."""
     from repro.comm import HALO_SCHEDULES
+    from repro.stencil import PRECONDS, SOLVERS
 
     lattices = [int(s) for s in str(args.lattice).split(",")]
     schedules = (list(HALO_SCHEDULES) if args.halo_schedule == "all"
                  else args.halo_schedule.split(","))
+    solvers = list(SOLVERS) if args.solver == "all" else args.solver.split(",")
+    preconds = (list(PRECONDS) if args.precond == "all"
+                else args.precond.split(","))
     for L in lattices:
         for schedule in schedules:
-            for multi in meshes:
-                # channels and cg_iters scale the recorded prediction, so
-                # they belong in the cache key (unlike the train suite,
-                # where the tag disambiguates overrides)
-                key = (f"{args.tag}|stencil_L{L}h{args.halo}"
-                       f"c{args.channels}i{args.cg_iters}|{schedule}|"
-                       f"{'multi' if multi else 'single'}")
-                if key in cache and not args.force:
-                    print(f"[cached] {key}")
-                    continue
-                print(f"[lower+compile] {key} ...", flush=True)
-                t0 = time.time()
-                try:
-                    rec = run_stencil_cell(L, schedule, multi,
-                                           channels=args.channels,
-                                           halo=args.halo,
-                                           cg_iters=args.cg_iters)
-                    rec["tag"] = args.tag
-                    cache[key] = rec
-                    r = rec["roofline"]
-                    err = rec["halo_bytes_rel_err"]
-                    print(f"  ok in {time.time()-t0:.1f}s: "
-                          f"halo_bytes={rec['predicted_halo_bytes']:.0f} "
-                          f"(HLO err {err:.2%}) "
-                          f"Tx={r['t_collective_s']:.6f}s "
-                          f"Tx_exposed={r['t_exposed_collective_s']:.6f}s "
-                          f"overlap={r['overlap_fraction']:.2f}", flush=True)
-                except Exception as e:
-                    cache[key] = {"error": str(e), "tag": args.tag,
-                                  "arch": "stencil", "shape": f"L{L}"}
-                    print(f"  FAILED: {e}")
-                    traceback.print_exc()
-                with open(args.out, "w") as f:
-                    json.dump(cache, f, indent=1)
+            for solver in solvers:
+                for precond in preconds:
+                    for multi in meshes:
+                        grid = {"schedule": schedule, "solver": solver,
+                                "precond": precond, "channels": args.channels,
+                                "cg_iters": args.cg_iters,
+                                "sstep_s": args.sstep_s}
+                        key = cell_key(args.tag, "stencil",
+                                       f"L{L}h{args.halo}",
+                                       "multi" if multi else "single", grid)
+                        if key in cache and not args.force:
+                            print(f"[cached] {key}")
+                            continue
+                        print(f"[lower+compile] {key} ...", flush=True)
+                        t0 = time.time()
+                        try:
+                            rec = run_stencil_cell(
+                                L, schedule, multi, channels=args.channels,
+                                halo=args.halo, cg_iters=args.cg_iters,
+                                solver=solver, precond=precond,
+                                sstep_s=args.sstep_s)
+                            rec["tag"] = args.tag
+                            cache[key] = rec
+                            r = rec["roofline"]
+                            err = rec["halo_bytes_rel_err"]
+                            print(
+                                f"  ok in {time.time()-t0:.1f}s: "
+                                f"halo_bytes={rec['predicted_halo_bytes']:.0f}"
+                                f" (HLO err {err:.2%}) reductions="
+                                f"{rec['predicted_reduction_collectives']}"
+                                f"/{rec['hlo_reduction_collectives']} "
+                                f"permutes="
+                                f"{rec['predicted_permute_collectives']}"
+                                f"/{rec['hlo_permute_collectives']} "
+                                f"Tx={r['t_collective_s']:.6f}s "
+                                f"Tx_exposed="
+                                f"{r['t_exposed_collective_s']:.6f}s "
+                                f"overlap={r['overlap_fraction']:.2f}",
+                                flush=True)
+                        except Exception as e:
+                            cache[key] = {"error": str(e), "tag": args.tag,
+                                          "arch": "stencil", "shape": f"L{L}"}
+                            print(f"  FAILED: {e}")
+                            traceback.print_exc()
+                        with open(args.out, "w") as f:
+                            json.dump(cache, f, indent=1)
 
 
 def main() -> None:
@@ -417,6 +487,17 @@ def main() -> None:
                     help="stencil suite: communicator virtual channels")
     ap.add_argument("--cg-iters", type=int, default=3,
                     help="stencil suite: unrolled CG iterations per cell")
+    ap.add_argument("--solver", default="cg",
+                    help="stencil suite: comma-separated solver variants "
+                         "(cg,pipelined,sstep) or 'all' — the predicted "
+                         "reduction-collective count drops from 2·iters+1 "
+                         "to iters to ceil(iters/s) along that list")
+    ap.add_argument("--precond", default="none",
+                    help="stencil suite: comma-separated preconditioners "
+                         "(none,eo) or 'all'")
+    ap.add_argument("--sstep-s", type=int, default=4,
+                    help="stencil suite: s-step block size (reductions per "
+                         "solve = ceil(cg_iters/s))")
     args = ap.parse_args()
 
     archs = list_archs() if args.arch == "all" else args.arch.split(",")
@@ -445,7 +526,10 @@ def main() -> None:
                       f"(sub-quadratic rule, see DESIGN.md)")
                 continue
             for multi in meshes:
-                key = f"{args.tag}|{arch}|{shape_name}|{'multi' if multi else 'single'}"
+                overrides = {"accum_microbatches": args.microbatches,
+                             "accum_policy": args.accum_policy}
+                key = cell_key(args.tag, arch, shape_name,
+                               "multi" if multi else "single", overrides)
                 if key in cache and not args.force:
                     print(f"[cached] {key}")
                     continue
@@ -453,10 +537,7 @@ def main() -> None:
                 t0 = time.time()
                 try:
                     rec = run_cell(arch, shape_name, multi,
-                                   overrides={"accum_microbatches":
-                                              args.microbatches,
-                                              "accum_policy":
-                                              args.accum_policy})
+                                   overrides=overrides)
                     rec["tag"] = args.tag
                     cache[key] = rec
                     r = rec["roofline"]

@@ -4,13 +4,20 @@ Three terms per (arch x shape x mesh) cell, v5e constants:
 
     T_compute    = HLO_FLOPs_per_device  / 197e12      (bf16 MXU peak)
     T_memory     = HLO_bytes_per_device  / 819e9       (HBM bandwidth)
-    T_collective = wire_bytes_per_device / 50e9        (per-link ICI)
+    T_collective = ALPHA_S * messages_per_device
+                 + wire_bytes_per_device / 50e9        (per-link ICI)
 
 ``cost_analysis`` supplies FLOPs/bytes; collective wire bytes are parsed
 from the optimized HLO text: every collective op's result shape is
 converted to per-device bytes-on-the-wire with the standard ring formulas
 (p from its replica-group size).  Models are fully unrolled, so no
 while-loop trip-count scaling is needed — the parser asserts that.
+
+The α term (``repro.comm.plan.LatencyModel``) prices per-message launch
+latency: it is what separates two tiny all-reduces per CG iteration from
+one fused one, which bandwidth-only accounting cannot see.  Cells that do
+not supply a message count keep the pure-bandwidth behaviour
+(``messages_per_device`` defaults to 0).
 """
 
 from __future__ import annotations
@@ -18,9 +25,13 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
+from repro.comm.plan import ALPHA_S, LINK_BANDWIDTH
+
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
-ICI_BW = 50e9                # bytes/s per link (one direction)
+ICI_BW = LINK_BANDWIDTH      # bytes/s per link (one direction); single
+                             # source in repro.comm.plan so the roofline and
+                             # LatencyModel β terms can never desync
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -70,12 +81,18 @@ class CollectiveStats:
     wire_bytes: float = 0.0
     op_bytes: dict = field(default_factory=dict)
     op_counts: dict = field(default_factory=dict)
+    messages: float = 0.0        # per-device sends (ring hops / ppermutes) —
+                                 # same unit as Transport
+                                 # .predicted_messages_per_device, so the
+                                 # roofline α term prices HLO-parsed and
+                                 # plan-predicted traffic identically
     while_loops: int = 0
 
-    def add(self, kind: str, b: float):
+    def add(self, kind: str, b: float, hops: float = 1.0):
         self.wire_bytes += b
         self.op_bytes[kind] = self.op_bytes.get(kind, 0.0) + b
         self.op_counts[kind] = self.op_counts.get(kind, 0) + 1
+        self.messages += hops
 
 
 def collective_wire_bytes(hlo_text: str) -> CollectiveStats:
@@ -88,6 +105,8 @@ def collective_wire_bytes(hlo_text: str) -> CollectiveStats:
       reduce-scatter     : result * (p-1)
       all-to-all         : result * (p-1)/p
     ``-start``/``-done`` async pairs are counted once (on the start op).
+    ``messages`` accumulates the matching ring hop counts (1 per permute,
+    ``2(p−1)`` per all-reduce, ``p−1`` otherwise) for the α latency term.
     """
     stats = CollectiveStats()
     seen_done = 0
@@ -109,13 +128,13 @@ def collective_wire_bytes(hlo_text: str) -> CollectiveStats:
         if p <= 1:
             continue
         if kind == "all-gather":
-            stats.add(kind, nbytes * (p - 1) / p)
+            stats.add(kind, nbytes * (p - 1) / p, hops=p - 1)
         elif kind == "all-reduce":
-            stats.add(kind, nbytes * 2 * (p - 1) / p)
+            stats.add(kind, nbytes * 2 * (p - 1) / p, hops=2 * (p - 1))
         elif kind == "reduce-scatter":
-            stats.add(kind, nbytes * (p - 1))
+            stats.add(kind, nbytes * (p - 1), hops=p - 1)
         elif kind == "all-to-all":
-            stats.add(kind, nbytes * (p - 1) / p)
+            stats.add(kind, nbytes * (p - 1) / p, hops=p - 1)
     return stats
 
 
@@ -128,6 +147,8 @@ class Roofline:
     overlap_fraction: float = 0.0   # CommSchedule.overlap_fraction: share of
                                     # collective traffic issued while compute
                                     # remains (0 = serialised after compute)
+    messages_per_device: float = 0.0  # collective launches (α latency term)
+    alpha_s: float = ALPHA_S
 
     @property
     def t_compute(self) -> float:
@@ -139,7 +160,9 @@ class Roofline:
 
     @property
     def t_collective(self) -> float:
-        return self.wire_bytes_per_device / ICI_BW
+        """α·messages + bytes/bw (pure bandwidth when no count supplied)."""
+        return (self.alpha_s * self.messages_per_device
+                + self.wire_bytes_per_device / ICI_BW)
 
     @property
     def t_exposed_collective(self) -> float:
@@ -183,6 +206,7 @@ class Roofline:
             "flops_per_device": self.flops_per_device,
             "hbm_bytes_per_device": self.hbm_bytes_per_device,
             "wire_bytes_per_device": self.wire_bytes_per_device,
+            "messages_per_device": self.messages_per_device,
             "t_compute_s": self.t_compute,
             "t_memory_s": self.t_memory,
             "t_collective_s": self.t_collective,

@@ -3,14 +3,28 @@
 The paper's first workload end-to-end: a Wilson-like nearest-neighbour
 operator over an N-D Cartesian mesh (:mod:`repro.stencil.op`) whose halo
 exchange runs any of the four :data:`repro.comm.HALO_SCHEDULES`, and a
-conjugate-gradient solver (:mod:`repro.stencil.cg`) whose global inner
-products ride the communicator's channelized ``all_reduce`` — the QCD
+communication-avoiding conjugate-gradient solver family
+(:mod:`repro.stencil.cg`: classic, pipelined, and s-step CG, optionally on
+the even-odd Schur complement of :mod:`repro.stencil.precond`) whose global
+inner products ride the communicator's channelized ``all_reduce`` — the QCD
 analogue of the SGD reduction path, sharing the same rails, schedules and
 prediction objects (:class:`repro.comm.HaloPlan`,
-:func:`repro.comm.build_halo_schedule`).
+:func:`repro.comm.build_halo_schedule`, and the solver-side collective
+counts of :func:`predicted_reduction_collectives`).
 """
 
-from repro.stencil.cg import CGResult, cg_solve, global_sums
+from repro.stencil.cg import (CGResult, PRECONDS, SOLVERS, cg_solve,
+                              global_sums, leja_chebyshev_shifts,
+                              pipelined_cg_solve,
+                              predicted_halo_exchanges,
+                              predicted_reduction_collectives, solve,
+                              sstep_cg_solve)
 from repro.stencil.op import StencilOp
+from repro.stencil.precond import EvenOddOp
 
-__all__ = ["CGResult", "StencilOp", "cg_solve", "global_sums"]
+__all__ = [
+    "CGResult", "EvenOddOp", "PRECONDS", "SOLVERS", "StencilOp", "cg_solve",
+    "global_sums", "leja_chebyshev_shifts", "pipelined_cg_solve",
+    "predicted_halo_exchanges", "predicted_reduction_collectives", "solve",
+    "sstep_cg_solve",
+]

@@ -1,34 +1,76 @@
-"""Conjugate gradients on a distributed stencil operator.
+"""Conjugate-gradient solver family on a distributed stencil operator.
 
-Runs *inside* a fully-manual ``shard_map``: the matrix-vector product is
-:meth:`repro.stencil.op.StencilOp.apply` (halo exchange + local stencil),
-and the two global inner products per iteration ride the communicator's
-channelized ``all_reduce`` — the same rails, transports and striping rule
-as gradient reduction (:func:`global_sums` packs the partial dots into one
-flat buffer padded to the transport's alignment divisor).
+Every solver runs *inside* a fully-manual ``shard_map``: the matrix-vector
+product is :meth:`repro.stencil.op.StencilOp.apply` (halo exchange + local
+stencil), and the global inner products ride the communicator's channelized
+``all_reduce`` (:func:`global_sums` packs the partial dots into one flat
+buffer padded to the transport's alignment divisor).  The family exists
+because the two tiny all-reduces classic CG issues per iteration are pure
+small-message latency — the regime the paper's Tables are about — and the
+production fixes are *structural*:
 
-Two iteration modes:
+``cg``
+    Textbook CG: two inner-product reductions per iteration
+    (``2·iters + 1`` including the initial ``‖r‖²/‖b‖²`` batch), each on
+    the critical path between matvecs.
 
-* ``tol`` given — a ``lax.while_loop`` runs until ``‖r‖² ≤ tol²·‖b‖²`` or
-  ``maxiter``; this is the production solver.
-* ``tol=None`` — exactly ``maxiter`` iterations as an unrolled Python loop:
-  deterministic HLO (no ``while``), which the dry-run's stencil suite and
-  the bitwise cross-schedule tests rely on (the roofline's wire-byte parser
-  cannot scale loop bodies by trip count).
+``pipelined``
+    Ghysels–Vanroose pipelined CG: the recurrence is rearranged so each
+    iteration issues **one** batched reduction (``γ = ‖r‖²``, ``δ = (w,r)``
+    and the latched ``‖b‖²`` share one buffer) that is *data-independent*
+    of the same iteration's matvec ``q = A w`` — the reduction hides under
+    the halo exchange + stencil compute.  ``iters`` reductions total.
 
-Because the operator's arithmetic is schedule-independent (see
-:mod:`repro.stencil.op`) and ``ppermute``/``all_reduce`` move exact values,
-every halo schedule produces bitwise-identical CG iterates.
+``sstep``
+    Communication-avoiding s-step CG (Chronopoulos–Gear blocks): each
+    outer block runs ``s`` matvecs building a Newton-basis Krylov block,
+    then batches **all** of the block's inner products — the basis Gram
+    matrix, the A-conjugation coupling to the previous block, and the
+    Galerkin correction — into one fused reduction: ``ceil(iters/s)``
+    reductions total.  The monomial basis ``[r, Ar, …]`` is numerically
+    unusable in f32 beyond s≈2; the basis here is the Newton basis with
+    Leja-ordered Chebyshev shifts (:func:`leja_chebyshev_shifts`) drawn
+    from the operator's *analytic* spectral enclosure
+    (:meth:`~repro.stencil.op.StencilOp.eig_bounds`), which tracks classic
+    CG to the f32 roundoff floor at s = 4.
+
+Preconditioning composes with any of the three: ``precond="eo"`` solves the
+even-odd Schur complement (:mod:`repro.stencil.precond`), roughly halving
+the iteration count and with it the number of latency-bound reductions.
+:func:`solve` dispatches over ``SOLVERS`` × ``PRECONDS``.
+
+Iteration modes (all solvers):
+
+* ``tol`` given — a ``lax.while_loop`` runs to ``‖r‖ ≤ tol·‖b‖`` or
+  ``maxiter``; the production path.
+* ``tol=None`` — a fixed iteration/block count as an unrolled Python loop:
+  deterministic HLO with a statically known collective count, which the
+  dry-run's solver cells and the HLO-count tests rely on
+  (:func:`predicted_reduction_collectives` /
+  :func:`predicted_halo_exchanges` are the exact predictions for this
+  mode with ``x0=None``).
+
+``CGResult.history`` records ``‖r‖²`` at each reduction point (iteration
+entry for ``cg``/``pipelined``, block entry for ``sstep``) in a fixed-size
+buffer; unwritten tail entries stay 0.  ``pipelined`` and ``sstep`` measure
+the residual *entering* each step, so their reported ``rel_residual`` lags
+the final update by one step/block — by construction it still satisfies the
+``tol`` test on exit.
 """
 
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.topology import padded_size
+from repro.stencil.precond import EvenOddOp
+
+SOLVERS = ("cg", "pipelined", "sstep")
+PRECONDS = ("none", "eo")
 
 
 class CGResult(NamedTuple):
@@ -37,6 +79,7 @@ class CGResult(NamedTuple):
     x: jax.Array
     iters: jax.Array        # iterations actually run
     rel_residual: jax.Array  # ‖r‖ / ‖b‖ at exit (recurrence residual)
+    history: jax.Array       # ‖r‖² per reduction point; tail entries 0
 
 
 def global_sums(comm, *vals):
@@ -59,11 +102,91 @@ def _dot(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.vdot(a.astype(jnp.float32), b.astype(jnp.float32))
 
 
+def leja_chebyshev_shifts(lo: float, hi: float, s: int) -> tuple[float, ...]:
+    """Leja-ordered Chebyshev points of ``[lo, hi]`` — the Newton-basis
+    shifts for one s-step block.  Chebyshev points minimise the basis
+    polynomial's sup-norm over the spectral enclosure; Leja ordering (start
+    from the extreme point, then greedily maximise the distance product to
+    the points already placed) keeps every *prefix* of the shift sequence
+    well spread, which is what bounds the Gram conditioning in f32.  Pure
+    Python on static floats: the shifts are compile-time constants."""
+    if s < 1:
+        raise ValueError(f"s must be >= 1, got {s}")
+    if not hi > lo:
+        raise ValueError(f"need hi > lo, got [{lo}, {hi}]")
+    mid, rad = (lo + hi) / 2.0, (hi - lo) / 2.0
+    pts = [mid + rad * math.cos((2 * k + 1) * math.pi / (2 * s))
+           for k in range(s)]
+    ordered = [max(pts, key=abs)]
+    pts.remove(ordered[0])
+    while pts:
+        nxt = max(pts, key=lambda t: math.prod(abs(t - u) for u in ordered))
+        pts.remove(nxt)
+        ordered.append(nxt)
+    return tuple(ordered)
+
+
+# ---------------------------------------------------------------------------
+# prediction helpers (exact for the unrolled mode with x0=None; upper bounds
+# for the while_loop mode) — read by the dry-run solver cells, the roofline's
+# α·messages latency term and the HLO-count tests
+# ---------------------------------------------------------------------------
+
+
+def predicted_reduction_collectives(solver: str, iters: int, s: int = 4
+                                    ) -> int:
+    """Inner-product reduction collectives one unrolled solve issues:
+    ``cg`` pays two per iteration plus the initial ``(‖r‖², ‖b‖²)`` batch,
+    ``pipelined`` one per iteration, ``sstep`` one per block."""
+    if solver == "cg":
+        return 2 * iters + 1
+    if solver == "pipelined":
+        return iters
+    if solver == "sstep":
+        return math.ceil(iters / max(s, 1))
+    raise ValueError(f"unknown solver {solver!r}; one of {SOLVERS}")
+
+
+def predicted_halo_exchanges(solver: str, precond: str, iters: int,
+                             s: int = 4, replace_every: int = 6) -> int:
+    """Halo exchanges (operator applications) one unrolled solve issues.
+    ``pipelined`` pays one extra matvec for ``w₀ = A r₀``, but its *last*
+    iteration's matvec feeds only dead state after an unrolled loop and is
+    DCE'd by XLA — the two cancel, so ``iters`` exchanges survive in the
+    lowered HLO.  Each residual replacement computes four matvecs but nets
+    **three**: overwriting both ``w`` and ``z`` leaves the *previous*
+    iteration's recurrence matvec with no live consumers, so DCE removes
+    it (assumed here not to land on the final iteration, where the
+    accounting differs again).  ``sstep`` always completes whole blocks;
+    even-odd doubles the per-matvec exchanges (Schur apply hops twice) and
+    adds one each for the right-hand-side projection and the odd-site
+    reconstruction."""
+    if solver == "cg":
+        base = iters
+    elif solver == "pipelined":
+        n_rep = (iters - 1) // replace_every if replace_every > 0 else 0
+        base = iters + 3 * n_rep
+    elif solver == "sstep":
+        base = max(s, 1) * math.ceil(iters / max(s, 1))
+    else:
+        raise ValueError(f"unknown solver {solver!r}; one of {SOLVERS}")
+    if precond == "none":
+        return base
+    if precond == "eo":
+        return 2 * base + 2
+    raise ValueError(f"unknown precond {precond!r}; one of {PRECONDS}")
+
+
+# ---------------------------------------------------------------------------
+# classic CG
+# ---------------------------------------------------------------------------
+
+
 def cg_solve(op, b: jax.Array, comm=None, *, x0: jax.Array | None = None,
              tol: float | None = 1e-6, maxiter: int = 100,
              schedule: str = "concurrent", chunks: int = 4,
              channels: int = 0, matvec=None) -> CGResult:
-    """Solve ``op x = b`` (SPD ``op``) by conjugate gradients.
+    """Solve ``op x = b`` (SPD ``op``) by classic conjugate gradients.
 
     ``b`` is this rank's local shard; ``op`` is a :class:`StencilOp` (or any
     object with the same ``apply`` signature).  ``schedule``/``chunks``/
@@ -79,6 +202,7 @@ def cg_solve(op, b: jax.Array, comm=None, *, x0: jax.Array | None = None,
     r = b - matvec(x) if x0 is not None else b
     p = r
     rs, bs = global_sums(comm, _dot(r, r), _dot(b, b))
+    hist = jnp.zeros((maxiter + 1,), jnp.float32).at[0].set(rs)
 
     def step(x, r, p, rs):
         ap = matvec(p)
@@ -97,23 +221,354 @@ def cg_solve(op, b: jax.Array, comm=None, *, x0: jax.Array | None = None,
     if tol is None:                     # fixed-iteration, unrolled HLO
         x, r, p = x.astype(jnp.float32), r.astype(jnp.float32), \
             p.astype(jnp.float32)
-        for _ in range(maxiter):
+        for k in range(maxiter):
             x, r, p, rs = step(x, r, p, rs)
+            hist = hist.at[k + 1].set(rs)
         iters = jnp.asarray(maxiter, jnp.int32)
     else:
         limit = jnp.asarray(tol * tol, jnp.float32) * bs
 
         def cond(state):
-            k, _, _, _, rs = state
+            k, _, _, _, rs, _ = state
             return jnp.logical_and(k < maxiter, rs > limit)
 
         def body(state):
-            k, x, r, p, rs = state
+            k, x, r, p, rs, h = state
             x, r, p, rs = step(x, r, p, rs)
-            return k + 1, x, r, p, rs
+            return k + 1, x, r, p, rs, h.at[k + 1].set(rs)
 
-        iters, x, r, p, rs = jax.lax.while_loop(
+        iters, x, r, p, rs, hist = jax.lax.while_loop(
             cond, body, (jnp.asarray(0, jnp.int32), x.astype(jnp.float32),
-                         r.astype(jnp.float32), p.astype(jnp.float32), rs))
+                         r.astype(jnp.float32), p.astype(jnp.float32), rs,
+                         hist))
     rel = jnp.sqrt(rs) / jnp.maximum(jnp.sqrt(bs), 1e-30)
-    return CGResult(x=x.astype(b.dtype), iters=iters, rel_residual=rel)
+    return CGResult(x=x.astype(b.dtype), iters=iters, rel_residual=rel,
+                    history=hist)
+
+
+# ---------------------------------------------------------------------------
+# pipelined CG (Ghysels & Vanroose)
+# ---------------------------------------------------------------------------
+
+
+def pipelined_cg_solve(op, b: jax.Array, comm=None, *,
+                       x0: jax.Array | None = None,
+                       tol: float | None = 1e-6, maxiter: int = 100,
+                       schedule: str = "concurrent", chunks: int = 4,
+                       channels: int = 0, matvec=None,
+                       replace_every: int = 6) -> CGResult:
+    """Pipelined CG: one reduction per iteration, issued concurrently with
+    the iteration's matvec.
+
+    Each iteration batches ``γ = (r,r)``, ``δ = (w,r)`` and a latched
+    ``(b,b)`` into one :func:`global_sums` call whose operands come from the
+    *previous* iteration's state — so the lowered all-reduce and the matvec
+    ``q = A w`` share no data dependency and the scheduler may run the
+    reduction under the halo exchange + stencil compute.  The recurrence
+    (Ghysels & Vanroose 2014, alg. 3) reproduces classic CG's iterates up
+    to f32 rounding.
+
+    The known cost of pipelining is *residual drift*: the recurrence
+    residual ``r`` (and the auxiliary ``w ≈ A r``, ``s ≈ A p``, ``z ≈ A s``
+    vectors) decouple from their true values at a rate ``∝ iters·ε·κ``, so
+    in f32 the solver would report convergence the true residual has not
+    reached.  The standard fix is periodic **residual replacement** (Cools
+    et al.): every ``replace_every`` iterations, recompute ``r = b − A x``,
+    ``w = A r``, ``s = A p`` and ``z = A s`` from their definitions while
+    keeping ``p`` and the scalar recurrences — the CG trajectory is
+    preserved, the accumulated rounding is discarded.  This costs four
+    extra matvecs per replacement and **zero** extra reductions — it spends
+    the cheap resource (halo exchanges) to keep the expensive one
+    (latency-bound reductions) at one per iteration.  ``replace_every=0``
+    disables replacement.
+    """
+    if matvec is None:
+        matvec = lambda v: op.apply(v, schedule=schedule, chunks=chunks,
+                                    channels=channels)
+    x = (jnp.zeros_like(b) if x0 is None else x0).astype(jnp.float32)
+    r = (b - matvec(x) if x0 is not None else b).astype(jnp.float32)
+    w = matvec(r).astype(jnp.float32)
+    zero = jnp.zeros_like(r)
+    hist0 = jnp.zeros((maxiter + 1,), jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def replace(x, p):
+        rr = bf - matvec(x).astype(jnp.float32)
+        ss = matvec(p).astype(jnp.float32)
+        return rr, matvec(rr).astype(jnp.float32), ss, \
+            matvec(ss).astype(jnp.float32)
+
+    def step(k, x, r, w, z, s_, p, g_old, a_old, bs):
+        g, de, bsp = global_sums(comm, _dot(r, r), _dot(w, r), _dot(bf, bf))
+        bs = jnp.where(k == 0, bsp, bs)
+        q = matvec(w)                   # independent of this step's reduction
+        beta = jnp.where(
+            k == 0, 0.0,
+            jnp.where(g_old > 0.0, g / jnp.where(g_old > 0.0, g_old, 1.0),
+                      0.0))
+        den = de - beta * g / jnp.where(a_old > 0.0, a_old, 1.0)
+        alpha = jnp.where(den > 0.0, g / jnp.where(den > 0.0, den, 1.0), 0.0)
+        z = q + beta * z
+        s_ = w + beta * s_
+        p = r + beta * p
+        x = x + alpha * p
+        r = r - alpha * s_
+        w = w - alpha * z
+        return x, r, w, z, s_, p, g, alpha, bs, g
+
+    if tol is None:                     # fixed-iteration, unrolled HLO
+        z = s_ = p = zero
+        g_old = a_old = jnp.asarray(1.0, jnp.float32)
+        bs = rs = jnp.asarray(jnp.inf, jnp.float32)
+        hist = hist0
+        for k in range(maxiter):
+            if replace_every > 0 and k > 0 and k % replace_every == 0:
+                r, w, s_, z = replace(x, p)
+            x, r, w, z, s_, p, g_old, a_old, bs, rs = step(
+                jnp.asarray(k, jnp.int32), x, r, w, z, s_, p, g_old, a_old,
+                bs)
+            hist = hist.at[k].set(rs)
+        iters = jnp.asarray(maxiter, jnp.int32)
+    else:
+        limit2 = jnp.asarray(tol * tol, jnp.float32)
+
+        def cond(state):
+            k, *_, bs, rs, _ = state
+            return jnp.logical_or(
+                k == 0, jnp.logical_and(k < maxiter, rs > limit2 * bs))
+
+        def body(state):
+            k, x, r, w, z, s_, p, g_old, a_old, bs, rs, h = state
+            if replace_every > 0:
+                rep = jnp.logical_and(k > 0, k % replace_every == 0)
+                r, w, s_, z = jax.lax.cond(
+                    rep, lambda _: replace(x, p),
+                    lambda _: (r, w, s_, z), None)
+            x, r, w, z, s_, p, g_old, a_old, bs, rs = step(
+                k, x, r, w, z, s_, p, g_old, a_old, bs)
+            return (k + 1, x, r, w, z, s_, p, g_old, a_old, bs, rs,
+                    h.at[k].set(rs))
+
+        state = (jnp.asarray(0, jnp.int32), x, r, w, zero, zero, zero,
+                 jnp.asarray(1.0, jnp.float32), jnp.asarray(1.0, jnp.float32),
+                 jnp.asarray(jnp.inf, jnp.float32),
+                 jnp.asarray(jnp.inf, jnp.float32), hist0)
+        iters, x, r, w, z, s_, p, g_old, a_old, bs, rs, hist = \
+            jax.lax.while_loop(cond, body, state)
+    rel = jnp.sqrt(rs) / jnp.maximum(jnp.sqrt(bs), 1e-30)
+    return CGResult(x=x.astype(b.dtype), iters=iters, rel_residual=rel,
+                    history=hist)
+
+
+# ---------------------------------------------------------------------------
+# s-step CG (Chronopoulos & Gear blocks, Newton basis)
+# ---------------------------------------------------------------------------
+
+
+def _tri_pairs(s: int) -> list[tuple[int, int]]:
+    """Upper-triangle index pairs of the (s+1)×(s+1) basis Gram matrix."""
+    return [(i, j) for i in range(s + 1) for j in range(i, s + 1)]
+
+
+def sstep_cg_solve(op, b: jax.Array, comm=None, *, s: int = 4,
+                   x0: jax.Array | None = None,
+                   tol: float | None = 1e-6, maxiter: int = 100,
+                   schedule: str = "concurrent", chunks: int = 4,
+                   channels: int = 0, matvec=None,
+                   eig_bounds: tuple[float, float] | None = None) -> CGResult:
+    """Communication-avoiding s-step CG: one fused reduction per ``s``
+    iterations.
+
+    Each outer block builds the Newton-basis Krylov block ``v₀ = r,
+    v_{j+1} = (A − θ_j)·v_j`` (``s`` matvecs; shifts from
+    :func:`leja_chebyshev_shifts` over ``eig_bounds``, default
+    ``op.eig_bounds()``), then batches every scalar the block needs into
+    **one** :func:`global_sums` call: the basis Gram matrix ``G`` (from
+    which ``Rᵀ A R`` follows via the shift recurrence), the coupling
+    ``C = APᵀ V`` to the previous direction block, and the Galerkin
+    correction ``h = Pᵀ r``.  The replicated (s×s) solves then advance
+    ``x`` by ``s`` CG-equivalent iterations (Chronopoulos & Gear 1989).
+    In exact arithmetic the block-boundary iterates equal classic CG's
+    every ``s``-th iterate; the Newton basis keeps that true to the f32
+    roundoff floor at ``s = 4``.
+
+    ``maxiter`` counts fine-grained iterations; blocks always complete, so
+    up to ``ceil(maxiter/s)`` reductions are issued.  ``x0`` is not
+    supported (the first block's reduction doubles as the ``‖b‖²``
+    measurement).  The convergence test runs on each block's *entry*
+    residual, so the while_loop mode performs one final block beyond the
+    block that reached ``tol``.
+    """
+    if x0 is not None:
+        raise ValueError("sstep_cg_solve does not support x0 (the first "
+                         "block's reduction doubles as the ‖b‖² batch)")
+    if s < 1:
+        raise ValueError(f"s must be >= 1, got {s}")
+    if matvec is None:
+        matvec = lambda v: op.apply(v, schedule=schedule, chunks=chunks,
+                                    channels=channels)
+    lo, hi = eig_bounds if eig_bounds is not None else op.eig_bounds()
+    theta = leja_chebyshev_shifts(lo, hi, s)
+    nblocks = math.ceil(max(int(maxiter), 1) / s)
+    pairs = _tri_pairs(s)
+    rank = b.ndim
+    th = jnp.asarray(theta, jnp.float32).reshape((s,) + (1,) * rank)
+    eye = jnp.eye(s, dtype=jnp.float32)
+
+    def block(x, r, P, AP, W_old):
+        V = [r]
+        for j in range(s):
+            V.append(matvec(V[j]).astype(jnp.float32)
+                     - jnp.asarray(theta[j], jnp.float32) * V[j])
+        Vs = jnp.stack(V)                              # (s+1,) + shape
+        # one fused reduction: Gram upper triangle + coupling + correction
+        dots = [_dot(V[i], V[j]) for i, j in pairs]
+        dots += [_dot(AP[i], V[j]) for i in range(s) for j in range(s)]
+        dots += [_dot(P[i], r) for i in range(s)]
+        red = global_sums(comm, *dots)
+        red = jnp.stack(red) if isinstance(red, tuple) else red[None]
+        nG = len(pairs)
+        G = jnp.zeros((s + 1, s + 1), jnp.float32)
+        for n, (i, j) in enumerate(pairs):
+            G = G.at[i, j].set(red[n])
+            G = G.at[j, i].set(red[n])
+        C = red[nG:nG + s * s].reshape(s, s)
+        h = red[nG + s * s:nG + s * s + s]
+        rs = G[0, 0]
+        # RᵀAR via the shift recurrence A v_j = v_{j+1} + θ_j v_j
+        M = G[:s, 1:s + 1] + G[:s, :s] * jnp.asarray(theta, jnp.float32)
+        # guards: past convergence (unrolled mode) the basis underflows and
+        # the Gram solves go singular — stall the block at a = 0 instead of
+        # poisoning x/r with NaNs, exactly like classic CG's alpha guard.
+        # Dropping B restarts the next block's conjugation from scratch,
+        # which is the standard CA-CG recovery and costs nothing once
+        # converged.
+        ok = rs > 0.0
+        W_safe = jnp.where(ok, W_old, eye)
+        B = -jnp.linalg.solve(W_safe, C)               # A-conjugation coupling
+        B = jnp.where(jnp.isfinite(B).all(), B, jnp.zeros((s, s)))
+        W = M + C.T @ B + B.T @ C + B.T @ W_safe @ B
+        W = 0.5 * (W + W.T)
+        g = G[0, :s] + B.T @ h
+        W_solve = jnp.where(ok, W, eye)
+        a = jnp.linalg.solve(W_solve, g)
+        a = jnp.where(jnp.logical_and(ok, jnp.isfinite(a).all()), a,
+                      jnp.zeros((s,)))
+        Pn = Vs[:s] + jnp.tensordot(B, P, axes=[[0], [0]])
+        APn = (Vs[1:] + th * Vs[:s]) + jnp.tensordot(B, AP, axes=[[0], [0]])
+        x = x + jnp.tensordot(a, Pn, axes=[[0], [0]])
+        r = r - jnp.tensordot(a, APn, axes=[[0], [0]])
+        return x, r, Pn, APn, W_solve, rs
+
+    x = jnp.zeros_like(b, dtype=jnp.float32)
+    r = b.astype(jnp.float32)
+    P0 = jnp.zeros((s,) + b.shape, jnp.float32)
+    hist0 = jnp.zeros((nblocks + 1,), jnp.float32)
+
+    if tol is None:                     # fixed block count, unrolled HLO
+        P, AP, W = P0, P0, eye
+        hist = hist0
+        rs = bs = jnp.asarray(jnp.inf, jnp.float32)
+        for k in range(nblocks):
+            x, r, P, AP, W, rs = block(x, r, P, AP, W)
+            bs = jnp.where(k == 0, rs, bs)
+            hist = hist.at[k].set(rs)
+        iters = jnp.asarray(nblocks * s, jnp.int32)
+    else:
+        limit2 = jnp.asarray(tol * tol, jnp.float32)
+
+        def cond(state):
+            k = state[0]
+            rs, bs = state[6], state[7]
+            return jnp.logical_or(
+                k == 0, jnp.logical_and(k < nblocks, rs > limit2 * bs))
+
+        def body(state):
+            k, x, r, P, AP, W, rs, bs, h = state
+            x, r, P, AP, W, rs = block(x, r, P, AP, W)
+            bs = jnp.where(k == 0, rs, bs)
+            return k + 1, x, r, P, AP, W, rs, bs, h.at[k].set(rs)
+
+        state = (jnp.asarray(0, jnp.int32), x, r, P0, P0, eye,
+                 jnp.asarray(jnp.inf, jnp.float32),
+                 jnp.asarray(jnp.inf, jnp.float32), hist0)
+        k, x, r, P, AP, W, rs, bs, hist = jax.lax.while_loop(
+            cond, body, state)
+        iters = k * s
+    rel = jnp.sqrt(rs) / jnp.maximum(jnp.sqrt(bs), 1e-30)
+    return CGResult(x=x.astype(b.dtype), iters=jnp.asarray(iters, jnp.int32),
+                    rel_residual=rel, history=hist)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+_SOLVER_FNS = {"cg": cg_solve, "pipelined": pipelined_cg_solve,
+               "sstep": sstep_cg_solve}
+
+
+def _check_even_extents(op, b: jax.Array, comm, reference: bool) -> None:
+    """Even-odd needs an even *global* extent along every stencil dim."""
+    sizes = {}
+    if comm is not None and not reference:
+        sizes = dict(zip(comm.mesh.axis_names, comm.mesh.devices.shape))
+    for spec in op.specs:
+        n = int(b.shape[spec.dim]) * int(sizes.get(spec.axis, 1))
+        if n % 2:
+            raise ValueError(
+                f"even-odd preconditioning needs an even global extent in "
+                f"every stencil direction; dim {spec.dim} (axis "
+                f"{spec.axis!r}) has global extent {n}")
+
+
+def solve(op, b: jax.Array, comm=None, *, solver: str = "cg",
+          precond: str = "none", s: int = 4, x0: jax.Array | None = None,
+          tol: float | None = 1e-6, maxiter: int = 100,
+          schedule: str = "concurrent", chunks: int = 4, channels: int = 0,
+          replace_every: int = 6, reference: bool = False) -> CGResult:
+    """Solve ``op x = b`` with any ``solver`` × ``precond`` combination.
+
+    ``reference=True`` solves on a *global* lattice outside any
+    ``shard_map`` via ``op.apply_reference`` (no communicator, parity from
+    array coordinates) — the single-process test path.  Otherwise the call
+    must run inside a fully-manual ``shard_map`` like :func:`cg_solve`.
+
+    With ``precond="eo"`` the chosen solver runs on the even-odd Schur
+    complement (half the unknowns, roughly half the iterations — and half
+    the latency-bound reductions); ``iters``/``rel_residual``/``history``
+    then describe the Schur solve, while ``x`` is the reconstructed
+    full-lattice solution.
+    """
+    if solver not in _SOLVER_FNS:
+        raise ValueError(f"unknown solver {solver!r}; one of {SOLVERS}")
+    if precond not in PRECONDS:
+        raise ValueError(f"unknown precond {precond!r}; one of {PRECONDS}")
+    kw = dict(x0=x0, tol=tol, maxiter=maxiter, schedule=schedule,
+              chunks=chunks, channels=channels)
+    fn = _SOLVER_FNS[solver]
+    if solver == "sstep":
+        kw["s"] = s
+    elif solver == "pipelined":
+        kw["replace_every"] = replace_every
+
+    if precond == "none":
+        matvec = op.apply_reference if reference else None
+        return fn(op, b, comm, matvec=matvec, **kw)
+
+    if x0 is not None:
+        raise ValueError("precond='eo' does not support x0 (the Schur "
+                         "right-hand side would need projecting around it)")
+    _check_even_extents(op, b, comm, reference)
+    distributed = (comm is not None and bool(comm.axes)) and not reference
+    eo = EvenOddOp(op, distributed=distributed)
+    apply_kw = dict(schedule=schedule, chunks=chunks, channels=channels)
+    if reference:
+        rhs = eo.project_rhs_reference(b)
+        res = fn(eo, rhs, comm, matvec=eo.apply_reference, **kw)
+        x = eo.reconstruct_reference(res.x, b)
+    else:
+        rhs = eo.project_rhs(b, **apply_kw)
+        res = fn(eo, rhs, comm, **kw)
+        x = eo.reconstruct(res.x, b, **apply_kw)
+    return res._replace(x=x.astype(b.dtype))

@@ -94,6 +94,16 @@ class StencilOp:
         return self.mass + 2.0 * sum(k * s.halo
                                      for k, s in zip(self.kappas, self.specs))
 
+    def eig_bounds(self) -> tuple[float, float]:
+        """Analytic spectral enclosure ``[λmin, λmax]`` of the periodic
+        operator.  Fourier-diagonalising gives eigenvalues ``diag − Σ_d κ_d
+        Σ_s 2·cos(s·θ_d)``, so every eigenvalue lies within ``off = 2·Σ_d
+        κ_d·w_d`` of the diagonal (Gershgorin-exact at ``θ = 0``).  The
+        s-step solver's Newton-basis shifts (:func:`repro.stencil.cg
+        .leja_chebyshev_shifts`) only need an enclosure, not tight bounds."""
+        off = 2.0 * sum(k * s.halo for k, s in zip(self.kappas, self.specs))
+        return self.diag - off, self.diag + off
+
     # -- local compute -------------------------------------------------------
 
     def _dir_sum(self, x: jax.Array, lo: jax.Array, hi: jax.Array,

@@ -208,3 +208,170 @@ print("COMM_EQUIV_OK")
 
 def test_transports_match_psum_on_1d_mesh():
     assert "COMM_EQUIV_OK" in run_distributed(EQUIV_SCRIPT, n_devices=4)
+
+
+# ---------------------------------------------------------------------------
+# GradientBucketer: the oversized-leaf invariant (a leaf larger than
+# bucket_bytes becomes a singleton bucket, never split) and its corollaries
+# ---------------------------------------------------------------------------
+
+
+def _plan_of(tree, bucket_bytes=1024, pad=128):
+    from repro.core.bucketing import GradientBucketer
+
+    b = GradientBucketer(bucket_bytes=bucket_bytes, pad_multiple=pad)
+    return b, b.plan(tree)
+
+
+def _bucket_of_leaf(plan):
+    return {f.leaf: f.bucket for f in plan.fields}
+
+
+def test_oversized_leaf_is_singleton_bucket():
+    import jax.numpy as jnp
+
+    # cap = 1024 B / 4 = 256 elements; the 1000-element leaf overflows it
+    big = jnp.zeros((1000,), jnp.float32)
+    small = jnp.zeros((10,), jnp.float32)
+    for order in (["a_big", "b_s1", "c_s2"],      # oversized first
+                  ["a_s1", "b_big", "c_s2"],      # oversized in the middle
+                  ["a_s1", "b_s2", "c_big"]):     # oversized last
+        tree = {k: (big if "big" in k else small) for k in order}
+        _, plan = _plan_of(tree)
+        by_leaf = _bucket_of_leaf(plan)
+        leaves = sorted(tree)                     # dict flatten order
+        big_leaf = next(i for i, k in enumerate(leaves) if "big" in k)
+        big_bucket = by_leaf[big_leaf]
+        # nothing shares the oversized leaf's bucket
+        assert [l for l, bk in by_leaf.items() if bk == big_bucket] == \
+            [big_leaf], order
+        # and the leaf was not split: its field spans its full size, and
+        # the bucket is exactly its padded size
+        f = next(f for f in plan.fields if f.leaf == big_leaf)
+        assert f.size == 1000 and f.offset == 0
+        assert plan.bucket_sizes[big_bucket] == 1024  # 1000 padded to 128s
+
+
+def test_adjacent_oversized_leaves_stay_separate():
+    import jax.numpy as jnp
+
+    tree = {"a": jnp.zeros((500,), jnp.float32),
+            "b": jnp.zeros((700,), jnp.float32)}
+    _, plan = _plan_of(tree)
+    by_leaf = _bucket_of_leaf(plan)
+    assert by_leaf[0] != by_leaf[1]
+    assert plan.n_buckets == 2
+
+
+def test_small_leaves_after_oversized_open_fresh_bucket():
+    import jax.numpy as jnp
+
+    tree = {"a": jnp.zeros((300,), jnp.float32),   # > 256-elem cap
+            "b": jnp.zeros((10,), jnp.float32),
+            "c": jnp.zeros((10,), jnp.float32)}
+    _, plan = _plan_of(tree)
+    by_leaf = _bucket_of_leaf(plan)
+    assert by_leaf[0] == 0
+    assert by_leaf[1] == by_leaf[2] == 1           # both fit bucket 1
+    assert plan.n_buckets == 2
+
+
+def test_oversized_roundtrip_and_padding_accounting():
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.RandomState(0)
+    tree = {"a": jnp.asarray(rng.randn(333).astype(np.float32)),
+            "b": jnp.asarray(rng.randn(7).astype(np.float32))}
+    b, plan = _plan_of(tree)
+    buckets, _ = b.bucketize(tree)
+    assert [int(x.shape[0]) for x in buckets] == list(plan.bucket_sizes)
+    back = b.debucketize(buckets, plan)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+    assert plan.used_elems == 340
+    assert plan.total_elems == sum(plan.bucket_sizes)
+
+
+# ---------------------------------------------------------------------------
+# latency model: t_collective = alpha * messages + bytes / bw
+# ---------------------------------------------------------------------------
+
+
+def test_latency_model_alpha_beta_split():
+    from repro.comm import ALPHA_S, LatencyModel
+
+    m = LatencyModel()
+    assert m.collective_seconds(0, 0) == 0.0
+    # pure-latency regime: tiny payload, many messages
+    assert m.collective_seconds(100, 8) == pytest.approx(
+        100 * ALPHA_S + 8 / m.bandwidth)
+    # alpha dominates small messages, beta dominates bulk
+    small = m.collective_seconds(10, 1024)
+    bulk = m.collective_seconds(10, 10 * 2**30)
+    assert small == pytest.approx(10 * ALPHA_S, rel=2e-2)
+    assert bulk == pytest.approx(10 * 2**30 / m.bandwidth, rel=2e-2)
+
+
+def test_transport_message_counts():
+    from repro.core.ring import RingConfig
+
+    def transport_for(name, **ring_kw):
+        _, cls = get_transport(name)
+        return cls(("data",), RingConfig(**ring_kw))
+
+    # psum: one ring over the joint world = 2*(p-1) hops
+    assert transport_for("psum").predicted_messages_per_device([4]) == 6.0
+    assert transport_for("psum").predicted_messages_per_device(
+        [2, 4]) == 14.0
+    assert transport_for("psum").predicted_messages_per_device([1]) == 0.0
+    # explicit bidirectional 2-chunk ring: 4 parallel chains, same hop count
+    ring = transport_for("ring", chunks=2, bidirectional=True)
+    assert ring.predicted_messages_per_device([4]) == 6.0 * 4
+    uni = transport_for("ring", chunks=1, bidirectional=False)
+    assert uni.predicted_messages_per_device([4]) == 6.0
+    # message count scales with buckets through CommPlan (axis size 1 mesh:
+    # no wire, so just check the field and describe key are wired through)
+    import jax.numpy as jnp
+
+    from repro import compat
+
+    mesh = compat.make_mesh((1,), ("data",))
+    comm = Communicator(mesh, CommConfig(transport="psum",
+                                         data_axes=("data",)))
+    plan = comm.plan({"w": jnp.zeros((512,), jnp.float32)})
+    assert plan.messages_per_device == 0.0
+    assert "messages_per_device" in plan.describe()
+    assert plan.predicted_collective_seconds() >= 0.0
+
+
+def test_halo_plan_message_count_is_unit_count():
+    from repro.core.halo import HaloSpec
+
+    from repro import compat
+
+    mesh = compat.make_mesh((1,), ("x",))
+    comm = Communicator(mesh, CommConfig(data_axes=("x",), channels=2))
+    specs = [HaloSpec("x", 0, 1)]
+    plan = comm.halo_plan((6, 5), specs, schedule="concurrent")
+    assert plan.messages_per_device == plan.n_units == 2
+    assert plan.describe()["messages_per_device"] == 2
+    assert plan.predicted_collective_seconds() == pytest.approx(
+        2 * 1.5e-6 + plan.bytes_per_device / 50e9)
+
+
+def test_roofline_alpha_term():
+    from repro.launch.roofline import ICI_BW, Roofline
+
+    base = Roofline(flops_per_device=1e12, hbm_bytes_per_device=1e9,
+                    wire_bytes_per_device=1e6)
+    with_alpha = Roofline(flops_per_device=1e12, hbm_bytes_per_device=1e9,
+                          wire_bytes_per_device=1e6,
+                          messages_per_device=1000)
+    # default (no count) keeps the pure-bandwidth behaviour
+    assert base.t_collective == pytest.approx(1e6 / ICI_BW)
+    assert with_alpha.t_collective == pytest.approx(
+        1e6 / ICI_BW + 1000 * with_alpha.alpha_s)
+    assert with_alpha.t_exposed_collective <= with_alpha.t_collective
+    assert with_alpha.as_dict(8)["messages_per_device"] == 1000

@@ -1,0 +1,56 @@
+"""Dry-run cell caching: the output-JSON key must include an override
+fingerprint, so re-running with a different ``--accum-policy`` / schedule /
+solver override can never be served a stale cached cell (regression: the
+key used to be ``tag|arch|shape|mesh`` only).
+
+Runs in a subprocess because importing ``repro.launch.dryrun`` sets the
+512-device ``XLA_FLAGS`` override, which must never leak into the main
+pytest process (see tests/conftest.py)."""
+
+from conftest import run_distributed
+
+CACHE_KEY_SCRIPT = r"""
+from repro.launch.dryrun import cell_key, overrides_fingerprint
+
+# no overrides: the bare legacy-shaped key
+assert cell_key("t", "arch", "shape", "single") == "t|arch|shape|single"
+assert cell_key("t", "arch", "shape", "single", {}) == "t|arch|shape|single"
+
+# overrides fold into the key ...
+base = {"accum_policy": "accumulate_then_reduce", "accum_microbatches": 1}
+k1 = cell_key("t", "arch", "shape", "single", base)
+assert k1 != "t|arch|shape|single"
+
+# ... so changing ONLY an override changes the key (the regression)
+k2 = cell_key("t", "arch", "shape", "single",
+              {**base, "accum_policy": "scheduled"})
+assert k2 != k1, (k1, k2)
+k3 = cell_key("t", "arch", "shape", "single",
+              {**base, "accum_microbatches": 4})
+assert k3 != k1 and k3 != k2
+
+# solver-grid knobs distinguish stencil cells the same way
+s1 = cell_key("t", "stencil", "L8h1", "single",
+              {"solver": "cg", "precond": "none", "sstep_s": 4})
+s2 = cell_key("t", "stencil", "L8h1", "single",
+              {"solver": "sstep", "precond": "none", "sstep_s": 4})
+s3 = cell_key("t", "stencil", "L8h1", "single",
+              {"solver": "sstep", "precond": "eo", "sstep_s": 4})
+assert len({s1, s2, s3}) == 3
+
+# deterministic and order-insensitive: same dict -> same key
+a = {"x": 1, "y": "z", "nested": {"b": 2, "a": 1}}
+b = {"nested": {"a": 1, "b": 2}, "y": "z", "x": 1}
+assert overrides_fingerprint(a) == overrides_fingerprint(b)
+assert cell_key("t", "m", "s", "multi", a) == cell_key("t", "m", "s", "multi", b)
+
+# distinct values never collide in the fingerprint
+assert overrides_fingerprint({"p": "ab"}) != overrides_fingerprint({"p": "a"})
+assert overrides_fingerprint(None) == "" == overrides_fingerprint({})
+print("DRYRUN_CACHE_KEY_OK")
+"""
+
+
+def test_cell_key_includes_override_fingerprint():
+    out = run_distributed(CACHE_KEY_SCRIPT, n_devices=1)
+    assert "DRYRUN_CACHE_KEY_OK" in out

@@ -1,14 +1,24 @@
-"""Hypothesis property tests over the system's core invariants."""
+"""Property tests over the system's core invariants.
+
+With ``hypothesis`` installed (the CI dev extra) each invariant is explored
+by randomised strategies; without it, the same invariants run as a
+deterministic parametrized grid over hand-picked representative cases, so a
+bare local checkout still gets tier-1 property coverage instead of a silent
+self-skip.  Every test body is shared between the two paths via
+:func:`given_or_grid` — keep the ``cases`` list in the same argument order
+as the strategy dict.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis",
-    reason="property tests need hypothesis (pip install -e '.[dev]')")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:               # deterministic grid fallback
+    HAVE_HYPOTHESIS = False
 
 from repro.core.bucketing import GradientBucketer
 from repro.core.compression import Int8BlockCodec, IdentityCodec
@@ -17,14 +27,40 @@ from repro.core.ring import RingConfig
 from repro.core.topology import padded_size, ring_perm
 from repro.optim.schedules import make_schedule
 
-SHAPES = st.lists(
-    st.tuples(st.integers(1, 4), st.integers(1, 64), st.integers(1, 8)),
-    min_size=1, max_size=12)
+
+def given_or_grid(argnames, cases, strategies):
+    """Hypothesis ``@given`` when available, else a pytest parametrize grid.
+
+    ``argnames`` is the comma-joined parameter list, ``cases`` the explicit
+    fallback tuples (same order), ``strategies`` a zero-arg callable
+    returning the ``@given`` kwargs — callable so strategy construction
+    never runs when hypothesis is absent."""
+    def wrap(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=30, deadline=None)(
+                given(**strategies())(fn))
+        return pytest.mark.parametrize(argnames, cases)(fn)
+    return wrap
 
 
-@settings(max_examples=30, deadline=None)
-@given(shapes=SHAPES, bucket_kb=st.sampled_from([1, 4, 64]),
-       pad=st.sampled_from([128, 256, 512]))
+_SHAPES_CASES = [
+    [(1, 3, 2)],
+    [(2, 64, 8), (1, 1, 1), (4, 5, 6)],
+    [(1, 17, 3)] * 7,
+    [(3, 33, 2), (1, 1, 8), (2, 2, 2), (4, 64, 1)],
+]
+
+
+@given_or_grid(
+    "shapes,bucket_kb,pad",
+    [(s, kb, pad) for s, (kb, pad) in zip(
+        _SHAPES_CASES, [(1, 128), (4, 256), (64, 512), (4, 128)])],
+    lambda: dict(
+        shapes=st.lists(st.tuples(st.integers(1, 4), st.integers(1, 64),
+                                  st.integers(1, 8)),
+                        min_size=1, max_size=12),
+        bucket_kb=st.sampled_from([1, 4, 64]),
+        pad=st.sampled_from([128, 256, 512])))
 def test_bucketize_roundtrip(shapes, bucket_kb, pad):
     """flatten -> buckets -> unflatten is the identity for any pytree."""
     rng = np.random.RandomState(42)
@@ -41,9 +77,12 @@ def test_bucketize_roundtrip(shapes, bucket_kb, pad):
     assert b.plan(tree) is plan
 
 
-@settings(max_examples=30, deadline=None)
-@given(n_blocks=st.integers(1, 16), block=st.sampled_from([128, 256, 512]),
-       scale=st.floats(1e-3, 1e3))
+@given_or_grid(
+    "n_blocks,block,scale",
+    [(1, 128, 1.0), (4, 256, 1e-3), (16, 512, 1e3), (3, 128, 42.0)],
+    lambda: dict(n_blocks=st.integers(1, 16),
+                 block=st.sampled_from([128, 256, 512]),
+                 scale=st.floats(1e-3, 1e3)))
 def test_int8_codec_error_bound(n_blocks, block, scale):
     """|decode(encode(x)) - x| <= blockwise absmax / 254 elementwise."""
     rng = np.random.RandomState(7)
@@ -55,15 +94,20 @@ def test_int8_codec_error_bound(n_blocks, block, scale):
     assert np.all(np.abs(np.asarray(back) - np.asarray(x)) <= bound)
 
 
-@settings(max_examples=50, deadline=None)
-@given(n=st.integers(1, 10_000), mult=st.sampled_from([1, 8, 128, 384]))
+@given_or_grid(
+    "n,mult",
+    [(1, 1), (1, 8), (7, 8), (128, 128), (129, 128), (9999, 384), (384, 384)],
+    lambda: dict(n=st.integers(1, 10_000),
+                 mult=st.sampled_from([1, 8, 128, 384])))
 def test_padded_size(n, mult):
     p = padded_size(n, mult)
     assert p >= n and p % mult == 0 and p - n < mult
 
 
-@settings(max_examples=20, deadline=None)
-@given(size=st.integers(2, 64), direction=st.sampled_from([1, -1]))
+@given_or_grid(
+    "size,direction",
+    [(2, 1), (2, -1), (5, 1), (8, -1), (64, 1)],
+    lambda: dict(size=st.integers(2, 64), direction=st.sampled_from([1, -1])))
 def test_ring_perm_is_permutation(size, direction):
     perm = ring_perm(size, direction)
     srcs = [a for a, _ in perm]
@@ -78,9 +122,12 @@ def test_ring_perm_is_permutation(size, direction):
     assert cur == 0
 
 
-@settings(max_examples=20, deadline=None)
-@given(name=st.sampled_from(["constant", "linear", "cosine", "wsd"]),
-       base=st.floats(1e-5, 1e-2), warmup=st.integers(1, 50))
+@given_or_grid(
+    "name,base,warmup",
+    [("constant", 1e-3, 1), ("linear", 1e-4, 10), ("cosine", 1e-2, 50),
+     ("wsd", 1e-5, 25)],
+    lambda: dict(name=st.sampled_from(["constant", "linear", "cosine", "wsd"]),
+                 base=st.floats(1e-5, 1e-2), warmup=st.integers(1, 50)))
 def test_schedules_warmup_and_bounds(name, base, warmup):
     f = make_schedule(name, base_lr=base, warmup=warmup, total=200)
     lrs = np.array([float(f(jnp.asarray(s))) for s in range(0, 200, 10)])
@@ -89,27 +136,39 @@ def test_schedules_warmup_and_bounds(name, base, warmup):
     assert float(f(jnp.asarray(warmup))) >= 0.99 * float(f(jnp.asarray(warmup + 1))) * 0.5
 
 
-@settings(max_examples=20, deadline=None)
-@given(shape=st.tuples(st.integers(2, 32), st.integers(2, 32)),
-       halo=st.integers(1, 2))
+@given_or_grid(
+    "shape,halo",
+    [((2, 2), 1), ((32, 7), 2), ((5, 32), 1), ((16, 16), 2)],
+    lambda: dict(shape=st.tuples(st.integers(2, 32), st.integers(2, 32)),
+                 halo=st.integers(1, 2)))
 def test_halo_bytes_formula(shape, halo):
     specs = [HaloSpec("data", 0, halo)]
     b = halo_bytes(shape, specs, 4)
     assert b == 2 * halo * shape[1] * 4
 
 
-_HALO_DIMS = st.integers(1, 3).flatmap(
-    lambda nd: st.tuples(
-        st.tuples(*[st.integers(2, 8) for _ in range(nd)]),
-        st.tuples(*[st.integers(1, 2) for _ in range(nd)])))
+_HALO_DIM_CASES = [
+    (((4,), (1,)), "sequential", 0, 1, 2),
+    (((2, 8), (1, 2)), "concurrent", 2, 3, 1),
+    (((8, 3, 5), (2, 1, 1)), "chunked", 0, 4, 6),
+    (((6, 7, 5), (1, 1, 2)), "overlap", 3, 2, 3),
+    (((5, 5), (2, 2)), "overlap", 0, 1, 4),
+    (((3, 4), (1, 2)), "chunked", 4, 3, 2),
+]
 
 
-@settings(max_examples=40, deadline=None)
-@given(dims=_HALO_DIMS,
-       schedule=st.sampled_from(["sequential", "concurrent", "chunked",
-                                 "overlap"]),
-       channels=st.integers(0, 4), chunks=st.integers(1, 4),
-       extra=st.integers(1, 6))
+@given_or_grid(
+    "dims,schedule,channels,chunks,extra",
+    _HALO_DIM_CASES,
+    lambda: dict(
+        dims=st.integers(1, 3).flatmap(
+            lambda nd: st.tuples(
+                st.tuples(*[st.integers(2, 8) for _ in range(nd)]),
+                st.tuples(*[st.integers(1, 2) for _ in range(nd)]))),
+        schedule=st.sampled_from(["sequential", "concurrent", "chunked",
+                                  "overlap"]),
+        channels=st.integers(0, 4), chunks=st.integers(1, 4),
+        extra=st.integers(1, 6)))
 def test_build_halo_schedule_invariants(dims, schedule, channels, chunks,
                                         extra):
     """Every direction's payload issues exactly once, channels stay in
@@ -136,10 +195,13 @@ def test_build_halo_schedule_invariants(dims, schedule, channels, chunks,
     assert sum(s.bucket_sizes) == halo_bytes(shape, specs, 4)
 
 
-@settings(max_examples=15, deadline=None)
-@given(shape=st.tuples(st.integers(3, 6), st.integers(3, 6)),
-       mass=st.floats(0.1, 2.0), seed=st.integers(0, 2**16),
-       halo=st.integers(1, 2))
+@given_or_grid(
+    "shape,mass,seed,halo",
+    [((3, 3), 0.1, 0, 1), ((4, 5), 0.5, 1, 2), ((6, 4), 1.5, 2, 1),
+     ((5, 6), 2.0, 12345, 2)],
+    lambda: dict(shape=st.tuples(st.integers(3, 6), st.integers(3, 6)),
+                 mass=st.floats(0.1, 2.0), seed=st.integers(0, 2**16),
+                 halo=st.integers(1, 2)))
 def test_cg_converges_to_linalg_solution(shape, mass, seed, halo):
     """CG on any SPD Wilson-like operator reaches the dense
     ``jnp.linalg.solve`` solution of the same periodic system."""
@@ -158,9 +220,35 @@ def test_cg_converges_to_linalg_solution(shape, mass, seed, halo):
     assert np.abs(np.asarray(res.x).reshape(-1) - xref).max() < 1e-3
 
 
-@settings(max_examples=20, deadline=None)
-@given(chunks=st.integers(1, 4), bidi=st.booleans(),
-       codec=st.sampled_from([None, "int8"]))
+@given_or_grid(
+    "shape,mass,seed,solver",
+    [((4, 6), 0.2, 0, "pipelined"), ((6, 4), 0.5, 1, "sstep"),
+     ((4, 4), 1.0, 2, "pipelined"), ((6, 6), 0.3, 3, "sstep")],
+    lambda: dict(shape=st.sampled_from([(4, 4), (4, 6), (6, 4), (6, 6)]),
+                 mass=st.floats(0.1, 2.0), seed=st.integers(0, 2**16),
+                 solver=st.sampled_from(["pipelined", "sstep"])))
+def test_comm_avoiding_solvers_converge_with_eo(shape, mass, seed, solver):
+    """Any comm-avoiding solver x even-odd combination on any SPD
+    even-extent Wilson-like operator reaches the dense solution."""
+    from repro.stencil import StencilOp, solve
+
+    specs = tuple(HaloSpec(f"ax{d}", d, 1) for d in range(len(shape)))
+    op = StencilOp(specs=specs, mass=mass)
+    rng = np.random.RandomState(seed)
+    b = jnp.asarray(rng.randn(*shape).astype(np.float32))
+    res = solve(op, b, None, solver=solver, precond="eo", s=4, tol=1e-5,
+                maxiter=400, reference=True)
+    A = np.asarray(op.dense_matrix(shape)).astype(np.float64)
+    xref = np.linalg.solve(A, np.asarray(b).reshape(-1).astype(np.float64))
+    assert float(res.rel_residual) < 1e-5
+    assert np.abs(np.asarray(res.x).reshape(-1) - xref).max() < 1e-3
+
+
+@given_or_grid(
+    "chunks,bidi,codec",
+    [(1, False, None), (2, True, None), (4, True, "int8"), (3, False, "int8")],
+    lambda: dict(chunks=st.integers(1, 4), bidi=st.booleans(),
+                 codec=st.sampled_from([None, "int8"])))
 def test_ring_config_divisor_consistency(chunks, bidi, codec):
     cfg = RingConfig(chunks=chunks, bidirectional=bidi, codec=codec)
     d = cfg.channel_divisor
