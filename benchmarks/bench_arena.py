@@ -1,0 +1,102 @@
+"""The paper's huge-page/fused-buffer table, for gradient reduction: the
+:mod:`repro.mem` CommArena (pack -> fused-span reduce -> unpack, persistent
+donated buffer) vs the per-bucket baseline at the same bucket config.
+
+Sweeps page_bytes {4 KiB small-page baseline, 2 MiB huge page} x virtual
+channels {1, 2, 4}.  Rows print as::
+
+    page_bytes,channels,n_buckets,n_spans,pad_pct,us_arena,us_buckets,pct
+
+``pct`` > 100 means the arena path is faster.  On shared-memory host
+devices this measures the *mechanism* (fewer collective launches, aligned
+flat copies, in-place donated buffer) — wire-level byte/page accounting
+lives in the dry-run's ``--suite mem`` roofline (EXPERIMENTS.md explains
+the split).
+
+``--dry`` runs one tiny combo per page size as a CI smoke.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import TIMER_SNIPPET, run_on_devices
+
+SCRIPT = TIMER_SNIPPET + r"""
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.comm import CommConfig, Communicator
+
+DRY = %(dry)s
+mesh = compat.make_mesh((8,), ("data",))
+rng = np.random.RandomState(0)
+N_LEAVES, LEAF = (6, 4096) if DRY else (24, 65536)
+params = {f"g{i}": jnp.asarray(rng.randn(LEAF + 128 * i).astype(np.float32))
+          for i in range(N_LEAVES)}
+batch = jnp.asarray(rng.randn(16, 8).astype(np.float32))
+
+def loss_fn(p, x):
+    return sum(jnp.sum(v) for v in p.values()) * 1e-3 + jnp.mean(x) * 0.0
+
+def grad_fn(p, mb):
+    return jax.value_and_grad(loss_fn)(p, mb)
+
+print("page_bytes,channels,n_buckets,n_spans,pad_pct,us_arena,us_buckets,pct")
+pages = [4096, 2 * 2**20]
+chans = [1] if DRY else [1, 2, 4]
+for page_bytes in pages:
+    for channels in chans:
+        comm = Communicator(mesh, CommConfig(
+            transport="ring_hier", chunks=2, channels=channels,
+            bucket_bytes=4 * LEAF, page_bytes=page_bytes,
+            data_axes=("data",)))
+        sched = comm.schedule(params, "scheduled", 1)
+        asched = comm.arena_schedule(params, "scheduled", 1)
+        arena = comm.arena(params)
+        lay = arena.layout
+
+        def bucket_run(p, b):
+            return comm.reduce_scheduled(grad_fn, p, b, sched,
+                                         op="all_reduce")
+
+        def arena_run(p, b, buf):
+            loss, (tree, out) = comm.reduce_scheduled(
+                grad_fn, p, b, asched, op="all_reduce", arena=arena,
+                arena_buf=buf)
+            return loss, tree, out
+
+        fb = jax.jit(compat.shard_map(
+            bucket_run, mesh=mesh, in_specs=(P(), P("data")),
+            out_specs=(P(), P()), check_vma=False))
+        fa = jax.jit(compat.shard_map(
+            arena_run, mesh=mesh, in_specs=(P(), P("data"), P(("data",))),
+            out_specs=(P(), P(), P(("data",))), check_vma=False),
+            donate_argnums=(2,))
+        t_bucket = time_call(fb, params, batch)
+        # the train-step contract: the returned (donated) arena threads
+        # straight back in, so no per-step allocation is paid or timed
+        state = {"buf": jnp.zeros((8 * lay.total_elems,), jnp.float32)}
+        def arena_call(p, b):
+            loss, tree, out = fa(p, b, state["buf"])
+            state["buf"] = out
+            return loss
+        t_arena = time_call(arena_call, params, batch)
+        pct = 100.0 * t_bucket / t_arena
+        print(f"{page_bytes},{channels},{lay.n_segments},{lay.n_spans},"
+              f"{100.0 * lay.padding_fraction:.2f},"
+              f"{t_arena*1e6:.1f},{t_bucket*1e6:.1f},{pct:.0f}")
+"""
+
+
+def run(dry: bool = False) -> str:
+    return run_on_devices(SCRIPT % {"dry": dry})
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true",
+                    help="tiny single-channel combo per page size (CI smoke)")
+    args = ap.parse_args()
+    print(run(dry=args.dry))

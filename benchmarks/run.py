@@ -13,7 +13,7 @@ import argparse
 import sys
 import time
 
-from benchmarks import bench_allreduce, bench_cg, bench_halo, \
+from benchmarks import bench_allreduce, bench_arena, bench_cg, bench_halo, \
     bench_overhead, bench_overlap, bench_stencil
 
 SECTIONS = [
@@ -24,6 +24,9 @@ SECTIONS = [
     ("tab_overlap_sgd", bench_overlap.run,
      "Seq vs Concurrent vs Threaded, for gradient reduction: "
      "schedule policy x channels"),
+    ("tab_mem_arena", bench_arena.run,
+     "Huge-page arena vs per-bucket reduction: "
+     "page_bytes x channels (repro.mem)"),
     ("tab1_3_halo", bench_halo.run,
      "Tables I-III: halo exchange schedules"),
     ("tab5_6_stencil", bench_stencil.run,

@@ -9,7 +9,6 @@ import jax
 from repro.comm import CommConfig
 from repro.configs import reduced_config
 from repro.configs.base import ShapeConfig
-from repro.core.overlap import AccumConfig
 from repro.data import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
@@ -32,7 +31,7 @@ def main() -> None:
         dp_mode="replicated",
         comm=CommConfig(transport="ring_hier", chunks=2),
         optim=OptimConfig(base_lr=3e-3, warmup=10, total_steps=60),
-        accum=AccumConfig(microbatches=1))
+        microbatches=1)
     trainer = Trainer(model, mesh, step_cfg, data, shape,
                       TrainerConfig(steps=60, log_every=10, ckpt_dir=None))
     out = trainer.run()

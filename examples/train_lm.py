@@ -14,7 +14,6 @@ import jax
 from repro.comm import CommConfig, list_transports
 from repro.configs import get_config, reduced_config
 from repro.configs.base import ShapeConfig
-from repro.core.overlap import AccumConfig
 from repro.data import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
@@ -44,6 +43,8 @@ def main() -> None:
                     help="virtual comm rails (0 = unconstrained)")
     ap.add_argument("--dp-mode", default="zero1", choices=DP_MODES)
     ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--use-arena", action="store_true",
+                    help="reduce out of the page-aligned repro.mem arena")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args()
@@ -61,7 +62,8 @@ def main() -> None:
                         chunks=2, bucket_bytes=32 * 2**20),
         optim=OptimConfig(base_lr=args.lr, warmup=20, schedule="wsd",
                           total_steps=args.steps),
-        accum=AccumConfig(microbatches=args.microbatches, policy="stream"))
+        microbatches=args.microbatches, schedule="stream",
+        use_arena=args.use_arena)
     trainer = Trainer(model, mesh, step_cfg, data, shape,
                       TrainerConfig(steps=args.steps, ckpt_every=50,
                                     ckpt_dir=args.ckpt_dir, log_every=20))

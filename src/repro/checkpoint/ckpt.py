@@ -78,22 +78,46 @@ def latest_step(ckpt_dir: str) -> int | None:
 
 
 def restore(like: Any, step: int, ckpt_dir: str, *, verify: bool = True,
-            shardings: Any = None) -> Any:
+            shardings: Any = None, strict: bool = True) -> Any:
     """Restore into the structure of ``like`` (arrays or SDS).  Optional
-    ``shardings`` tree re-places leaves (elastic re-mesh)."""
+    ``shardings`` tree re-places leaves (elastic re-mesh).
+
+    ``strict=False`` matches leaves **by path** instead of by position:
+    leaves present in ``like`` but absent from the checkpoint keep their
+    ``like`` value (they must then be concrete arrays), and checkpoint
+    leaves with no counterpart in ``like`` are ignored.  This is what lets
+    a run restore across config changes that add or drop *scratch* state —
+    e.g. a model trained with ``use_arena=True`` (whose state carries the
+    persistent comm-arena buffer) restoring into a non-arena step and vice
+    versa.  Shape/dtype checks still apply per matched leaf — a config
+    change that *re-shapes* surviving leaves (ZeRO-1's per-span optimizer
+    re-layout, a different ``page_bytes`` for the arena leaf) still raises
+    rather than silently dropping state.
+    """
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "meta.msgpack"), "rb") as f:
         meta = msgpack.unpackb(f.read())
-    flat, treedef = jax.tree_util.tree_flatten(like)
-    if len(flat) != len(meta["leaves"]):
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(like)
+    if strict and len(flat_p) != len(meta["leaves"]):
         raise ValueError(
             f"checkpoint has {len(meta['leaves'])} leaves, state expects "
-            f"{len(flat)} — incompatible structures")
-    out = []
+            f"{len(flat_p)} — incompatible structures (pass strict=False "
+            f"to match by path)")
+    by_path = {rec["path"]: rec for rec in meta["leaves"]}
     sh_flat = (jax.tree_util.tree_flatten(
         shardings, is_leaf=lambda x: hasattr(x, "addressable_devices"))[0]
-        if shardings is not None else [None] * len(flat))
-    for leaf, rec, sh in zip(flat, meta["leaves"], sh_flat):
+        if shardings is not None else [None] * len(flat_p))
+    out = []
+    for i, ((path, leaf), sh) in enumerate(zip(flat_p, sh_flat)):
+        key = jax.tree_util.keystr(path)
+        rec = meta["leaves"][i] if strict else by_path.get(key)
+        if rec is None:                      # not in ckpt: keep like's value
+            if isinstance(leaf, jax.ShapeDtypeStruct):
+                raise ValueError(
+                    f"leaf {key} is missing from the checkpoint and the "
+                    f"template is abstract — nothing to keep")
+            out.append(leaf)
+            continue
         p = os.path.join(d, rec["file"])
         if verify:
             with open(p, "rb") as f:
@@ -159,8 +183,10 @@ class CheckpointManager:
             shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
                           ignore_errors=True)
 
-    def restore_latest(self, like: Any, shardings: Any = None):
+    def restore_latest(self, like: Any, shardings: Any = None,
+                       strict: bool = True):
         step = latest_step(self.ckpt_dir)
         if step is None:
             return None, None
-        return restore(like, step, self.ckpt_dir, shardings=shardings), step
+        return restore(like, step, self.ckpt_dir, shardings=shardings,
+                       strict=strict), step

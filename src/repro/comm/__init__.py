@@ -12,8 +12,9 @@ Legacy string policies (``ReduceConfig.policy``) map onto transports via
 remains as a deprecated shim over this package.
 """
 
-from repro.comm.api import (CommConfig, Communicator, POLICY_TO_TRANSPORT,
-                            comm_config_from_policy)
+from repro.comm.api import CommConfig, Communicator
+# legacy string-policy mapping: lives with the GradientReducer shim
+from repro.core.reducer import POLICY_TO_TRANSPORT, comm_config_from_policy
 from repro.comm.plan import (ALPHA_S, ChannelAssignment, CommPlan,
                              HaloChannel, HaloPlan, LatencyModel,
                              assign_channels)

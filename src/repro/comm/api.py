@@ -26,8 +26,8 @@ class.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import Sequence
+from dataclasses import dataclass
+from typing import Sequence, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
@@ -47,16 +47,14 @@ from repro.core.halo import HaloSpec, halo_exchange as _halo_exchange
 from repro.core.ring import RingConfig
 from repro.core.topology import order_token, reduce_axes_of
 
-# former ReduceConfig.policy -> (transport, CommConfig field overrides)
-POLICY_TO_TRANSPORT: dict[str, tuple[str, dict]] = {
-    "baidu_original": ("ring", {"chunks": 1, "bidirectional": False,
-                                "wire_dtype": None, "local_op": "jnp"}),
-    "fused_ring": ("ring", {}),
-    "fused_ring_hierarchical": ("ring_hier", {}),
-    "fused_ring_compressed": ("ring_compressed", {}),
-    "native_psum": ("psum", {"fuse": False}),
-    "native_psum_fused": ("psum", {}),
-}
+if TYPE_CHECKING:  # repro.mem is imported lazily (it imports comm.schedule)
+    from repro.mem.arena import CommArena
+    from repro.mem.layout import ArenaLayout
+
+# NOTE: the legacy ``POLICY_TO_TRANSPORT`` table and
+# ``comm_config_from_policy`` live with the rest of the string-policy shim
+# in :mod:`repro.core.reducer` (re-exported from :mod:`repro.comm` for
+# compatibility).
 
 
 @dataclass(frozen=True)
@@ -66,6 +64,7 @@ class CommConfig:
     transport: str = "ring_hier"
     data_axes: tuple[str, ...] = ("pod", "data")
     bucket_bytes: int = 4 * 2**20
+    page_bytes: int = 2 * 2**20    # arena quantization granule (huge page)
     channels: int = 0              # 0 = unconstrained; N = N guaranteed rails
     chunks: int = 2                # per-segment ppermute chains (ring only)
     bidirectional: bool = True
@@ -135,7 +134,10 @@ class Communicator:
         return assign_channels(bucket_sizes, n)
 
     def plan(self, tree) -> CommPlan:
-        """Full communication plan for one gradient-shaped pytree."""
+        """Full communication plan for one gradient-shaped pytree, including
+        the page-quantized :class:`~repro.mem.layout.ArenaLayout` the arena
+        mode would reduce out of (pages, padding overhead, and the fused
+        α/β cost where padding bytes cross the wire too)."""
         bplan = self.bucketer.plan(tree)
         chans = self.stripe(bplan.bucket_sizes)
         n = max(bplan.used_elems, 1)
@@ -143,13 +145,55 @@ class Communicator:
         wire_per_elem = codec.wire_bytes(n) / n
         bytes_dev = self.transport.predicted_bytes_per_device(
             bplan.used_elems, self.axis_sizes)
-        msgs = (self.transport.predicted_messages_per_device(self.axis_sizes)
-                * bplan.n_buckets)
+        msgs_per_unit = self.transport.predicted_messages_per_device(
+            self.axis_sizes)
+        # silent layout: plan() runs for every dry-run/roofline cell; the
+        # oversized-leaf warning belongs to actual arena construction
+        layout = self.arena_layout(tree, warn=False, _chans=chans)
+        arena_bytes = self.transport.predicted_bytes_per_device(
+            layout.total_elems, self.axis_sizes)
         return CommPlan(transport=self.cfg.transport, axes=self.axes,
                         axis_sizes=self.axis_sizes, bucket_plan=bplan,
                         channels=chans, wire_bytes_per_elem=wire_per_elem,
                         bytes_per_device=bytes_dev,
-                        messages_per_device=msgs)
+                        messages_per_device=msgs_per_unit * bplan.n_buckets,
+                        arena_layout=layout,
+                        arena_bytes_per_device=arena_bytes,
+                        arena_messages_per_device=(msgs_per_unit
+                                                   * layout.n_spans))
+
+    def arena_layout(self, tree, *, warn: bool = True,
+                     _chans: tuple[ChannelAssignment, ...] | None = None
+                     ) -> "ArenaLayout":
+        """The page-quantized arena placement of ``tree``'s buckets:
+        segment offsets/sizes quantized to ``cfg.page_bytes`` (lcm'd with
+        the transport's flat divisor so fused spans stay reduce-scatter
+        legal), segments grouped into one contiguous span per virtual
+        channel.  (``bucketer.plan`` is signature-cached, so repeated
+        calls on the same tree shape replan nothing; ``_chans`` lets
+        :meth:`plan` reuse its striping.)"""
+        from repro.mem.layout import arena_from_bucket_plan
+
+        bplan = self.bucketer.plan(tree)
+        chans = (_chans if _chans is not None
+                 else self.stripe(bplan.bucket_sizes))
+        chan_of = [0] * bplan.n_buckets
+        for a in chans:
+            for b in a.buckets:
+                chan_of[b] = a.channel
+        return arena_from_bucket_plan(
+            bplan, page_bytes=self.cfg.page_bytes, channel_of=chan_of,
+            pad_multiple=self.bucketer.pad_multiple,
+            bucket_bytes=self.cfg.bucket_bytes, warn_oversized=warn)
+
+    def arena(self, tree) -> "CommArena":
+        """A :class:`~repro.mem.arena.CommArena` over :meth:`arena_layout`;
+        the pack/unpack implementation follows ``cfg.local_op`` (the same
+        knob that selects the Pallas ring-step accumulate)."""
+        from repro.mem.arena import CommArena
+
+        impl = "pallas" if self.cfg.local_op == "pallas" else "jnp"
+        return CommArena(self.arena_layout(tree), impl=impl)
 
     # -- channelized execution (inside a fully-manual shard_map) -------------
 
@@ -336,8 +380,21 @@ class Communicator:
                               microbatches=microbatches,
                               channels=self.cfg.channels)
 
+    def arena_schedule(self, tree, policy: str, microbatches: int = 1
+                       ) -> CommSchedule:
+        """The span-level schedule the arena mode executes: the bucket
+        schedule of :meth:`schedule` with each channel's contiguous arena
+        span fused into a single issue
+        (:func:`repro.mem.layout.fuse_schedule`)."""
+        from repro.mem.layout import fuse_schedule
+
+        return fuse_schedule(self.schedule(tree, policy, microbatches),
+                             self.arena_layout(tree))
+
     def reduce_scheduled(self, grad_fn, params, batch,
-                         schedule: CommSchedule, *, op: str = "all_reduce"):
+                         schedule: CommSchedule, *, op: str = "all_reduce",
+                         arena: "CommArena | None" = None,
+                         arena_buf: jax.Array | None = None):
         """Run ``grad_fn(params, microbatch) -> (loss, grads)`` over
         ``schedule.microbatches`` slices of ``batch`` (split on the leading
         axis), issuing each gradient bucket's collective at its schedule
@@ -357,6 +414,23 @@ class Communicator:
         :func:`~repro.core.topology.order_token` so each rail issues FIFO in
         readiness order; rails stay independent.  ``channels == 0`` leaves
         every collective unconstrained.
+
+        **Arena mode** (``arena`` given): gradients pack into the
+        page-aligned :class:`~repro.mem.arena.CommArena` buffer and each
+        issue slot reduces one contiguous arena *span* instead of a bucket
+        — fewer, larger, aligned messages (``schedule`` must then be the
+        span-level :meth:`arena_schedule`).  ``arena_buf`` is the persistent
+        (donated) buffer from the step state; it is returned alongside the
+        result so the caller can thread it back:
+
+        * ``"all_reduce"``     -> ``(loss, (tree, arena_out))``;
+        * ``"reduce_scatter"`` -> ``(loss, (span_shards, bucket_plan,
+          arena_out))`` — invert with :meth:`all_gather` over the spans and
+          :meth:`CommArena.unpack_spans <repro.mem.arena.CommArena
+          .unpack_spans>`;
+        * ``"none"``           -> ``(loss, (tree, arena_out))`` — the arena
+          is the microbatch accumulation buffer (FSDP: reduction rides the
+          gather transpose, so only residency changes).
         """
         if op not in ("all_reduce", "reduce_scatter", "none"):
             raise ValueError(f"op must be all_reduce|reduce_scatter|none, "
@@ -365,6 +439,10 @@ class Communicator:
             raise ValueError(
                 f"transport {self.cfg.transport!r} does not support "
                 f"reduce-scatter (supports_rs=False)")
+        if arena is not None:
+            return self._reduce_scheduled_arena(grad_fn, params, batch,
+                                                schedule, op, arena,
+                                                arena_buf)
         if not self.axes:
             if op == "reduce_scatter":
                 # downgrading would change the return shape from
@@ -451,6 +529,126 @@ class Communicator:
             return loss, (acc, bplan)
         return loss, self.bucketer.debucketize(acc, bplan)
 
+    def _reduce_scheduled_arena(self, grad_fn, params, batch,
+                                schedule: CommSchedule, op: str,
+                                arena: "CommArena",
+                                arena_buf: jax.Array | None):
+        """Arena-mode body of :meth:`reduce_scheduled` (see there).  Every
+        collective moves one contiguous page-quantized span of the arena —
+        padding crosses the wire, buckets never move individually."""
+        layout = arena.layout
+        if not self.axes:
+            raise ValueError("arena mode needs data axes; this "
+                             "communicator's mesh has none")
+        if op != "none":
+            if not self.cfg.fuse:
+                raise ValueError("arena mode needs fused aligned buckets "
+                                 "(fuse=True)")
+            if schedule.n_buckets != layout.n_spans:
+                raise ValueError(
+                    f"arena mode expects a span-level schedule with "
+                    f"{layout.n_spans} spans, got {schedule.n_buckets}; "
+                    f"build it with Communicator.arena_schedule")
+        m = max(schedule.microbatches, 1)
+        collective = (self.transport.all_reduce if op == "all_reduce"
+                      else self.transport.reduce_scatter)
+        micro = (jax.tree.map(
+            lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch)
+            if m > 1 else None)
+        inv = 1.0 / m
+        deps: dict[int, jax.Array] = {}
+        chained = schedule.channels >= 1
+
+        def issue(span_buf, channel):
+            if not chained:
+                return collective(span_buf)
+            y = collective(order_token(deps.get(channel), span_buf))
+            deps[channel] = y.reshape(-1)[0]
+            return y
+
+        def reduce_spans(buf, phase):
+            """All-reduce each span in place (slice, reduce, write back)."""
+            for slot in schedule.slots_for_phase(phase):
+                for s in slot.bucket_ids:       # span indices
+                    sp = layout.spans[s]
+                    seg = lax.slice_in_dim(buf, sp.offset,
+                                           sp.offset + sp.size, axis=0)
+                    buf = lax.dynamic_update_slice_in_dim(
+                        buf, issue(seg, slot.channel), sp.offset, axis=0)
+            return buf
+
+        def scatter_spans(buf, phase, out):
+            """Reduce-scatter each span into its shard slot."""
+            for slot in schedule.slots_for_phase(phase):
+                for s in slot.bucket_ids:
+                    sp = layout.spans[s]
+                    seg = lax.slice_in_dim(buf, sp.offset,
+                                           sp.offset + sp.size, axis=0)
+                    out[s] = issue(seg, slot.channel)
+            return out
+
+        streamed = schedule.policy != "accumulate_then_reduce"
+        losses = []
+        acc = None                 # arena buffer, or span-shard list (RS)
+        bplan: BucketPlan | None = None
+        treedef = None             # op == "none": the grads tree layout
+        leaf_meta: list[tuple] = []
+        buf = arena_buf if arena_buf is not None else arena.zeros()
+        for i in range(m):
+            mb = batch if m == 1 else jax.tree.map(lambda x: x[i], micro)
+            loss, grads = grad_fn(params, mb)
+            losses.append(loss)
+            if op == "none":
+                leaves, treedef = jax.tree.flatten(grads)
+                if len(leaves) != layout.n_segments:
+                    raise ValueError(
+                        f"arena has {layout.n_segments} segments but the "
+                        f"gradient tree has {len(leaves)} leaves; build "
+                        f"the arena from the same tree")
+                leaf_meta = [(l.shape, l.dtype) for l in leaves]
+                if m > 1:
+                    leaves = [l.astype(jnp.float32) * inv for l in leaves]
+                buf = arena.pack_into(buf, [l.reshape(-1) for l in leaves])
+                acc = buf if acc is None else acc + buf
+                continue
+            buckets, bplan = self.bucketer.bucketize(grads)
+            if bplan.n_buckets != layout.n_segments:
+                raise ValueError(
+                    f"arena has {layout.n_segments} segments but the "
+                    f"gradient tree bucketizes into {bplan.n_buckets}; "
+                    f"build the arena with Communicator.arena on the same "
+                    f"tree")
+            if m > 1:
+                buckets = [b.astype(jnp.float32) * inv for b in buckets]
+            buf = arena.pack_into(buf, buckets)
+            if not streamed:
+                acc = buf if acc is None else acc + buf
+            elif op == "all_reduce":
+                red = reduce_spans(buf, i)
+                acc = red if acc is None else acc + red
+            else:
+                out = scatter_spans(buf, i, [None] * layout.n_spans)
+                acc = out if acc is None else [a + o
+                                               for a, o in zip(acc, out)]
+        if op != "none" and not streamed:
+            acc = (reduce_spans(acc, m - 1) if op == "all_reduce"
+                   else scatter_spans(acc, m - 1, [None] * layout.n_spans))
+        loss = losses[0] if m == 1 else jnp.mean(jnp.stack(losses))
+        if op == "none":
+            leaves = arena.unpack(acc)
+            leaves = [u.reshape(shape).astype(jnp.float32 if m > 1
+                                              else dtype)
+                      for u, (shape, dtype) in zip(leaves, leaf_meta)]
+            return loss, (jax.tree.unflatten(treedef, leaves), acc)
+        if op == "reduce_scatter":
+            inv_w = jnp.asarray(1.0 / self.world if self.cfg.mean else 1.0,
+                                jnp.float32)
+            return loss, ([s * inv_w for s in acc], bplan, buf)
+        if self.cfg.mean:
+            acc = acc * jnp.asarray(1.0 / self.world, jnp.float32)
+        tree = self.bucketer.debucketize(arena.unpack(acc), bplan)
+        return loss, (tree, acc)
+
     # -- SPMD wrappers (called OUTSIDE shard_map) ----------------------------
 
     def reduce(self, grads, specs, ef_state=None):
@@ -503,22 +701,3 @@ class Communicator:
 def _is_abstract(tree) -> bool:
     leaves = jax.tree.leaves(tree)
     return bool(leaves) and isinstance(leaves[0], jax.ShapeDtypeStruct)
-
-
-def comm_config_from_policy(policy: str, **fields) -> CommConfig:
-    """Map a legacy ``ReduceConfig.policy`` name onto a :class:`CommConfig`.
-
-    ``fields`` are CommConfig overrides taken from the legacy config; the
-    policy's own forced overrides (e.g. ``baidu_original`` => unidirectional
-    single-chunk) win over them.
-    """
-    try:
-        transport, forced = POLICY_TO_TRANSPORT[policy]
-    except KeyError:
-        raise ValueError(
-            f"unknown policy {policy!r}; one of "
-            f"{tuple(POLICY_TO_TRANSPORT)}") from None
-    base = CommConfig(transport=transport)
-    merged = {**fields, **forced}
-    known = {k: v for k, v in merged.items() if hasattr(base, k)}
-    return replace(base, **known)

@@ -91,6 +91,12 @@ class CommPlan:
     wire_bytes_per_elem: float     # codec/wire-dtype bytes per element
     bytes_per_device: float        # predicted all-reduce wire bytes/device
     messages_per_device: float = 0.0  # discrete sends/device (α latency term)
+    # arena mode (repro.mem): page-quantized fused-span layout + its cost.
+    # The arena byte term covers the page padding too — in arena mode the
+    # padding crosses the wire, so the prediction must not pretend otherwise.
+    arena_layout: "object | None" = None     # repro.mem.layout.ArenaLayout
+    arena_bytes_per_device: float = 0.0      # wire bytes incl. page padding
+    arena_messages_per_device: float = 0.0   # α term at one send per span
 
     @property
     def n_buckets(self) -> int:
@@ -128,7 +134,7 @@ class CommPlan:
         """The dict ``GradientReducer.predicted_collective_bytes`` returned,
         plus the channel-level breakdown."""
         used = self.bucket_plan.used_elems
-        return {
+        out = {
             "bytes_per_device": self.bytes_per_device,
             "grad_bytes": used * 4.0,
             "wire_bytes_per_elem": self.wire_bytes_per_elem,
@@ -136,6 +142,16 @@ class CommPlan:
             "channel_imbalance": self.channel_imbalance,
             "messages_per_device": self.messages_per_device,
         }
+        if self.arena_layout is not None:
+            out.update({
+                "arena_bytes_per_device": self.arena_bytes_per_device,
+                "arena_messages_per_device": self.arena_messages_per_device,
+                "arena_pages": float(self.arena_layout.n_pages),
+                "arena_total_bytes": float(self.arena_layout.total_bytes),
+                "arena_padding_fraction":
+                    self.arena_layout.padding_fraction,
+            })
+        return out
 
     def predicted_collective_seconds(self, model: LatencyModel = LatencyModel()
                                      ) -> float:
@@ -145,7 +161,7 @@ class CommPlan:
 
     def describe(self) -> dict:
         """JSON-friendly summary for the dry-run report."""
-        return {
+        out = {
             "transport": self.transport,
             "axes": list(self.axes),
             "axis_sizes": list(self.axis_sizes),
@@ -157,6 +173,9 @@ class CommPlan:
                           "elems": a.elems} for a in self.channels],
             **self.predicted_collective_bytes(),
         }
+        if self.arena_layout is not None:
+            out["arena"] = self.arena_layout.describe()
+        return out
 
 
 @dataclass(frozen=True)

@@ -16,10 +16,9 @@ transports are made of:
 * :mod:`repro.core.halo`        — Cartesian halo exchange (QCD workload);
   reachable as ``Communicator.halo_exchange``.
 * :mod:`repro.core.compression` — wire codecs + error feedback.
-* :mod:`repro.core.overlap`     — DEPRECATED accumulation-policy shim; the
-  policies are canned :mod:`repro.comm.schedule` CommSchedules now.
 * :mod:`repro.core.reducer`     — DEPRECATED ``GradientReducer`` shim kept
-  for legacy string-policy call sites; delegates to ``repro.comm``.
+  for legacy string-policy call sites (incl. ``POLICY_TO_TRANSPORT``);
+  delegates to ``repro.comm``.
 
 New code should construct a ``Communicator`` rather than reaching for these
 modules directly::
@@ -31,15 +30,14 @@ modules directly::
 from repro.core.bucketing import BucketPlan, GradientBucketer
 from repro.core.compression import ErrorFeedback, Int8BlockCodec, IdentityCodec, make_codec
 from repro.core.halo import HaloSpec, halo_exchange, pad_with_halos
-from repro.core.overlap import AccumConfig, accumulate_and_reduce
 from repro.core.reducer import GradientReducer, ReduceConfig, per_tensor_reducer
 from repro.core.ring import (RingConfig, flat_all_reduce, hierarchical_all_reduce,
                              ring_all_gather, ring_all_reduce, ring_reduce_scatter)
 
 __all__ = [
-    "AccumConfig", "BucketPlan", "ErrorFeedback", "GradientBucketer",
+    "BucketPlan", "ErrorFeedback", "GradientBucketer",
     "GradientReducer", "HaloSpec", "IdentityCodec", "Int8BlockCodec",
-    "ReduceConfig", "RingConfig", "accumulate_and_reduce", "flat_all_reduce",
+    "ReduceConfig", "RingConfig", "flat_all_reduce",
     "halo_exchange", "hierarchical_all_reduce", "make_codec",
     "pad_with_halos", "per_tensor_reducer", "ring_all_gather",
     "ring_all_reduce", "ring_reduce_scatter",

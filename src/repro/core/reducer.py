@@ -40,6 +40,42 @@ from repro.core.ring import RingConfig
 POLICIES = ("baidu_original", "fused_ring", "fused_ring_hierarchical",
             "fused_ring_compressed", "native_psum", "native_psum_fused")
 
+# former ReduceConfig.policy -> (transport, CommConfig field overrides).
+# Lives here — with the rest of the string-policy compatibility shim — so
+# no production code path depends on the legacy table; repro.comm
+# re-exports it for old importers.
+POLICY_TO_TRANSPORT: dict[str, tuple[str, dict]] = {
+    "baidu_original": ("ring", {"chunks": 1, "bidirectional": False,
+                                "wire_dtype": None, "local_op": "jnp"}),
+    "fused_ring": ("ring", {}),
+    "fused_ring_hierarchical": ("ring_hier", {}),
+    "fused_ring_compressed": ("ring_compressed", {}),
+    "native_psum": ("psum", {"fuse": False}),
+    "native_psum_fused": ("psum", {}),
+}
+
+
+def comm_config_from_policy(policy: str, **fields):
+    """Map a legacy ``ReduceConfig.policy`` name onto a
+    :class:`repro.comm.CommConfig`.
+
+    ``fields`` are CommConfig overrides taken from the legacy config; the
+    policy's own forced overrides (e.g. ``baidu_original`` => unidirectional
+    single-chunk) win over them.
+    """
+    from repro.comm.api import CommConfig
+
+    try:
+        transport, forced = POLICY_TO_TRANSPORT[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {policy!r}; one of "
+            f"{tuple(POLICY_TO_TRANSPORT)}") from None
+    base = CommConfig(transport=transport)
+    merged = {**fields, **forced}
+    known = {k: v for k, v in merged.items() if hasattr(base, k)}
+    return replace(base, **known)
+
 
 @dataclass(frozen=True)
 class ReduceConfig:
@@ -56,8 +92,6 @@ class ReduceConfig:
     mean: bool = True
 
     def comm_config(self, channels: int = 0):
-        from repro.comm.api import comm_config_from_policy
-
         return comm_config_from_policy(
             self.policy, data_axes=self.data_axes,
             bucket_bytes=self.bucket_bytes, chunks=self.chunks,
@@ -76,7 +110,7 @@ class GradientReducer:
     :class:`Communicator` it constructs."""
 
     def __init__(self, mesh: Mesh, cfg: ReduceConfig = ReduceConfig()):
-        from repro.comm.api import Communicator, POLICY_TO_TRANSPORT
+        from repro.comm.api import Communicator
 
         if cfg.policy not in POLICIES:
             raise ValueError(f"unknown policy {cfg.policy!r}; one of {POLICIES}")

@@ -1,0 +1,3 @@
+from repro.kernels.pack.ops import read_flat, write_flat
+
+__all__ = ["read_flat", "write_flat"]

@@ -1,0 +1,52 @@
+"""Jit'd wrappers: flat arena writes/reads with automatic tiling/fallback.
+
+``write_flat`` / ``read_flat`` are the ``impl='pallas'`` hooks of
+:class:`repro.mem.arena.CommArena`: they view the 1-D arena and segment
+payloads as (rows, 128) lane tiles and run the Pallas flat-copy kernels
+(interpret mode off-TPU).  Shapes or offsets not meeting the (8·128)
+alignment fall back to the jnp oracle — correctness is never conditional on
+the fast path.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import default_interpret
+from repro.kernels.pack import ref
+from repro.kernels.pack.pack import LANES, _block_rows, read_rows_2d, \
+    write_rows_2d
+
+
+def _tileable(size: int, offset: int, total: int) -> bool:
+    if size % LANES or offset % LANES or total % LANES:
+        return False
+    return _block_rows(size // LANES, offset // LANES) > 0
+
+
+def write_flat(arena: jax.Array, src: jax.Array, offset: int, *,
+               interpret: bool | None = None) -> jax.Array:
+    """``arena`` with ``src`` written at ``offset`` (element index)."""
+    if arena.ndim != 1 or src.ndim != 1:
+        raise ValueError(f"flat buffers expected, got {arena.shape} / "
+                         f"{src.shape}")
+    n = src.shape[0]
+    if src.dtype != arena.dtype or not _tileable(n, offset, arena.shape[0]):
+        return ref.write_flat(arena, src, offset)
+    interpret = default_interpret() if interpret is None else interpret
+    out = write_rows_2d(arena.reshape(-1, LANES), src.reshape(-1, LANES),
+                        offset // LANES, interpret=interpret)
+    return out.reshape(-1)
+
+
+def read_flat(arena: jax.Array, offset: int, size: int, *,
+              interpret: bool | None = None) -> jax.Array:
+    """``arena[offset : offset + size]``."""
+    if arena.ndim != 1:
+        raise ValueError(f"flat arena expected, got {arena.shape}")
+    if not _tileable(size, offset, arena.shape[0]):
+        return ref.read_flat(arena, offset, size)
+    interpret = default_interpret() if interpret is None else interpret
+    out = read_rows_2d(arena.reshape(-1, LANES), offset // LANES,
+                       size // LANES, interpret=interpret)
+    return out.reshape(-1)

@@ -1,0 +1,96 @@
+"""Flat-copy kernels for the communication arena (pack/unpack).
+
+The paper's T1/T2 memory techniques culminate in *one* stable, page-aligned
+buffer per step that every collective reduces out of.  Moving gradients in
+and out of that buffer is pure data movement — exactly the kind of local
+copy loop the paper threads (T4).  On TPU the analogue is a VPU-width copy
+that streams lane-aligned (rows, 128) tiles between a bucket and its arena
+segment:
+
+* :func:`write_rows_2d`  — copy a source tile block into a row-offset slice
+  of the arena, *in place* (``input_output_aliases``), so packing N buckets
+  is N aliased copies over one persistent buffer instead of a fresh
+  concatenation per step;
+* :func:`read_rows_2d`   — the inverse: materialise one segment's rows out
+  of the arena (unpack).
+
+Segment offsets are page-quantized by :mod:`repro.mem.layout` (2 MiB
+default = 4096 rows of 128 fp32 lanes), so the row offsets here are always
+multiples of any power-of-two block size — guaranteed, never probabilistic,
+the paper's ethos.  Sources whose row counts don't meet the fp32 (8, 128)
+tiling fall back to the jnp oracle in ``ops.py``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+SUBLANES = 8               # fp32 min tile is (8, 128)
+MAX_BLOCK_ROWS = 1024      # (1024, 128) fp32 tile = 512 KiB per operand
+
+
+def _block_rows(rows: int, row_offset: int) -> int:
+    """Largest tile height that divides both the copy extent and its
+    alignment; 0 when no (8·128)-aligned tiling exists (caller falls back)."""
+    br = math.gcd(rows, MAX_BLOCK_ROWS)
+    if row_offset:
+        br = math.gcd(br, row_offset)
+    return br if br % SUBLANES == 0 else 0
+
+
+def _copy_kernel(_arena_ref, src_ref, o_ref):
+    o_ref[...] = src_ref[...].astype(o_ref.dtype)
+
+
+def write_rows_2d(arena: jax.Array, src: jax.Array, row_offset: int, *,
+                  interpret: bool = False) -> jax.Array:
+    """Return ``arena`` with ``src`` written at ``arena[row_offset:...]``.
+
+    ``arena``: (rows_total, 128); ``src``: (rows, 128).  The arena input is
+    aliased to the output, so untouched rows keep their values and XLA can
+    update the (donated) buffer in place.
+    """
+    rows = src.shape[0]
+    br = _block_rows(rows, row_offset)
+    if br <= 0:
+        raise ValueError(f"no aligned tiling for rows={rows} at "
+                         f"offset={row_offset}; use the ops.py fallback")
+    grid = (rows // br,)
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, LANES), lambda i: (row_offset // br + i, 0)),
+                  pl.BlockSpec((br, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, LANES), lambda i: (row_offset // br + i, 0)),
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(arena, src)
+
+
+def _slice_kernel(arena_ref, o_ref):
+    o_ref[...] = arena_ref[...]
+
+
+def read_rows_2d(arena: jax.Array, row_offset: int, rows: int, *,
+                 interpret: bool = False) -> jax.Array:
+    """``arena[row_offset : row_offset + rows]`` as a fresh (rows, 128)
+    buffer — the unpack direction of :func:`write_rows_2d`."""
+    br = _block_rows(rows, row_offset)
+    if br <= 0:
+        raise ValueError(f"no aligned tiling for rows={rows} at "
+                         f"offset={row_offset}; use the ops.py fallback")
+    grid = (rows // br,)
+    return pl.pallas_call(
+        _slice_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, LANES), lambda i: (row_offset // br + i, 0))],
+        out_specs=pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), arena.dtype),
+        interpret=interpret,
+    )(arena)

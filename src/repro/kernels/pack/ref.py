@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the arena pack/unpack kernels."""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+
+def write_flat(arena: jax.Array, src: jax.Array, offset: int) -> jax.Array:
+    """``arena`` with ``src`` (cast to the arena dtype) written at
+    ``arena[offset : offset + src.size]``."""
+    return lax.dynamic_update_slice_in_dim(
+        arena, src.astype(arena.dtype), offset, axis=0)
+
+
+def read_flat(arena: jax.Array, offset: int, size: int) -> jax.Array:
+    """``arena[offset : offset + size]``."""
+    return lax.slice_in_dim(arena, offset, offset + size, axis=0)

@@ -28,9 +28,8 @@ from dataclasses import replace
 import jax
 import jax.numpy as jnp
 
-from repro.comm import POLICY_TO_TRANSPORT, SCHEDULE_POLICIES
+from repro.comm import SCHEDULE_POLICIES
 from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
-from repro.core.overlap import AccumConfig
 from repro.data import make_batch_specs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (Roofline, collective_wire_bytes,
@@ -73,43 +72,36 @@ def _abstract_batch(model, shape_cfg):
 def make_step_config(arch: str, overrides: dict | None = None) -> TrainStepConfig:
     """Per-arch step config with override plumbing.
 
-    The accumulation *policy* is no longer hardcoded: ``accum_policy``
-    overrides the legacy field, and a new-style ``schedule`` key (any
-    :data:`~repro.comm.SCHEDULE_POLICIES` member) sets
-    ``TrainStepConfig.schedule`` directly, taking precedence.
+    ``comm_<field>`` keys hit :class:`~repro.comm.CommConfig` directly
+    (``comm_page_bytes`` included); every other key is a
+    :class:`TrainStepConfig` field (``microbatches``, ``schedule``,
+    ``use_arena``, ``dp_mode``, ...).  Legacy ``accum_microbatches`` /
+    ``accum_policy`` spellings map onto the new fields, with the
+    new-style key winning when both are present.  (The old ``reduce_*``
+    string-policy overrides are gone with the ``core.overlap`` shim —
+    use ``comm_transport`` etc.)
     """
     st = settings_for(arch)
     ccfg = st.comm_config()
-    kw = dict(dp_mode=st.dp_mode,
-              accum=AccumConfig(microbatches=st.microbatches,
-                                policy="accumulate_then_reduce"),
-              causal_skip=False)
+    kw = dict(dp_mode=st.dp_mode, microbatches=st.microbatches,
+              schedule="accumulate_then_reduce", causal_skip=False)
     if overrides:
+        stale = [k for k in overrides if k.startswith("reduce_")]
+        if stale:
+            raise ValueError(
+                f"reduce_* overrides were removed with the string-policy "
+                f"shim; use comm_<field> (e.g. comm_transport, "
+                f"comm_wire_dtype) — got {stale}")
         # new-style comm_* keys hit CommConfig fields directly
         comm_over = {k[5:]: v for k, v in overrides.items()
                      if k.startswith("comm_")}
-        # legacy reduce_* keys: reduce_policy maps through the transport
-        # registry, the rest are shared field names
-        red = {k[7:]: v for k, v in overrides.items() if k.startswith("reduce_")}
-        accum = {k[6:]: v for k, v in overrides.items() if k.startswith("accum_")}
         rest = {k: v for k, v in overrides.items()
-                if not k.startswith(("reduce_", "accum_", "comm_"))}
-        policy = red.pop("policy", None)
-        if red:
-            ccfg = replace(ccfg, **red)
-        if policy is not None:
-            # after the shared fields, so a policy's forced overrides win —
-            # same precedence as comm_config_from_policy
-            if policy not in POLICY_TO_TRANSPORT:
-                raise ValueError(
-                    f"unknown reduce_policy {policy!r}; one of "
-                    f"{tuple(POLICY_TO_TRANSPORT)}")
-            transport, forced = POLICY_TO_TRANSPORT[policy]
-            ccfg = replace(ccfg, transport=transport, **forced)
+                if not k.startswith("comm_")}
+        rest.setdefault("microbatches", rest.pop("accum_microbatches", None))
+        rest.setdefault("schedule", rest.pop("accum_policy", None))
+        rest = {k: v for k, v in rest.items() if v is not None}
         if comm_over:
             ccfg = replace(ccfg, **comm_over)
-        if accum:
-            kw["accum"] = AccumConfig(**{**kw["accum"].__dict__, **accum})
         kw.update(rest)
     return TrainStepConfig(comm=ccfg, **kw)
 
@@ -278,6 +270,218 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 "mesh": "2x16x16" if multi_pod else "16x16",
                 "devices": n_dev})
     return out
+
+
+MEM_DEFAULT_ARCHS = ["whisper-base", "llama3.2-1b"]
+
+
+def _entry_param_elems(hlo_text: str, index: int, dtype: str = "f32"
+                       ) -> int | None:
+    """Element count of ENTRY parameter ``index`` in optimized HLO text —
+    the *lowered* size of a buffer we predicted (fusion-internal
+    ``parameter(i)`` lines outside ENTRY are ignored)."""
+    import re as _re
+
+    in_entry = False
+    pat = _re.compile(rf"{dtype}\[(\d+)\]")
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if in_entry:
+            if line.startswith("}"):
+                break
+            if f"parameter({index})" in line:
+                m = pat.search(line)
+                return int(m.group(1)) if m else None
+    return None
+
+
+def run_mem_cell(arch: str, page_bytes: int, bucket_mb: float, *,
+                 channels: int = 2, transport: str = "psum") -> dict:
+    """One ``--suite mem`` cell: lower + compile a pack→reduce→unpack step
+    over the arch's (reduced) gradient tree with a **donated** arena, then
+    hold the :mod:`repro.mem` prediction layer to the optimized HLO with
+    zero tolerance:
+
+    * **bytes/pages** — the per-device arena parameter in the compiled
+      module must be exactly ``ArenaLayout.total_elems`` fp32 elements
+      (page-quantized), i.e. predicted bytes == lowered buffer size and
+      predicted page count == lowered bytes / page_bytes;
+    * **counts** — the arena path must lower to exactly ``n_spans``
+      all-reduce ops (fused segments) and the per-bucket baseline to
+      exactly ``n_buckets`` — strictly more whenever fusing collapses
+      anything, the paper's fewer-larger-messages claim in HLO;
+    * **wire bytes** — parsed collective bytes must equal
+      ``CommPlan.arena_bytes_per_device`` (page padding crosses the wire;
+      the roofline folds it via ``padding_wire_bytes_per_device``).
+    """
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.comm import CommConfig
+    from repro.configs import reduced_config
+    from repro.runtime.train_step import _local_shapes, build_comm
+
+    mesh = compat.make_mesh((4, 1), ("data", "model"),
+                            devices=jax.devices()[:4])
+    n_dev = 4
+    model = build_model(reduced_config(arch))
+    tcfg = TrainStepConfig(
+        dp_mode="replicated",
+        comm=CommConfig(transport=transport, channels=channels,
+                        bucket_bytes=int(bucket_mb * 2**20),
+                        page_bytes=int(page_bytes)),
+        schedule="scheduled", use_arena=True)
+    with mesh:
+        comm = build_comm(mesh, tcfg)
+        pspecs = model.param_specs(mesh)
+        local = _local_shapes(model.abstract_params(), pspecs, mesh)
+        cplan = comm.plan(local)
+        layout = cplan.arena_layout
+        arena = comm.arena(local)
+        sched_bucket = comm.schedule(local, "scheduled", 1)
+        sched_arena = comm.arena_schedule(local, "scheduled", 1)
+        grads_abs = model.abstract_params()
+        batch_abs = {"x": jax.ShapeDtypeStruct((1,), jnp.float32)}
+
+        def grad_like(p, mb):
+            return jnp.zeros((), jnp.float32), p
+
+        def arena_fn(buf, grads, batch):
+            _, (tree, out) = comm.reduce_scheduled(
+                grad_like, grads, batch, sched_arena, op="all_reduce",
+                arena=arena, arena_buf=buf)
+            return out, tree
+
+        def bucket_fn(grads, batch):
+            _, tree = comm.reduce_scheduled(grad_like, grads, batch,
+                                            sched_bucket, op="all_reduce")
+            return tree
+
+        flat = P(tuple(mesh.axis_names))
+        arena_abs = jax.ShapeDtypeStruct((n_dev * layout.total_elems,),
+                                         jnp.float32)
+        fa = jax.jit(compat.shard_map(
+            arena_fn, mesh=mesh, in_specs=(flat, pspecs, P()),
+            out_specs=(flat, pspecs), check_vma=False), donate_argnums=(0,))
+        fb = jax.jit(compat.shard_map(
+            bucket_fn, mesh=mesh, in_specs=(pspecs, P()),
+            out_specs=pspecs, check_vma=False))
+        t0 = time.time()
+        ca = fa.lower(arena_abs, grads_abs, batch_abs).compile()
+        cb = fb.lower(grads_abs, batch_abs).compile()
+        compile_s = time.time() - t0
+
+    txt_a, txt_b = ca.as_text(), cb.as_text()
+    stats_a = collective_wire_bytes(txt_a)
+    stats_b = collective_wire_bytes(txt_b)
+    n_ar_arena = stats_a.op_counts.get("all-reduce", 0)
+    n_ar_bucket = stats_b.op_counts.get("all-reduce", 0)
+
+    # --- the zero-tolerance prediction checks -----------------------------
+    # the arena is arena_fn's first (donated) argument -> ENTRY parameter 0
+    # of the partitioned module; its lowered size must equal the predicted
+    # page-quantized layout exactly
+    lowered_elems = _entry_param_elems(txt_a, 0)
+    if lowered_elems != layout.total_elems:
+        raise AssertionError(
+            f"lowered arena parameter is f32[{lowered_elems}], predicted "
+            f"f32[{layout.total_elems}] ({layout.total_bytes} B, "
+            f"{layout.n_pages} pages)")
+    if n_ar_arena != layout.n_spans:
+        raise AssertionError(
+            f"arena path lowered to {n_ar_arena} all-reduce ops, predicted "
+            f"{layout.n_spans} fused spans")
+    if n_ar_bucket != cplan.n_buckets:
+        raise AssertionError(
+            f"bucket baseline lowered to {n_ar_bucket} all-reduce ops, "
+            f"predicted {cplan.n_buckets} buckets")
+    if layout.n_spans < cplan.n_buckets and not n_ar_arena < n_ar_bucket:
+        raise AssertionError(
+            f"fused spans did not reduce the collective count: "
+            f"{n_ar_arena} vs {n_ar_bucket}")
+    measured = stats_a.op_bytes.get("all-reduce", 0.0)
+    predicted = cplan.arena_bytes_per_device
+    if predicted and abs(measured - predicted) / predicted > 1e-9:
+        raise AssertionError(
+            f"arena wire bytes: predicted {predicted}, HLO {measured}")
+
+    padding_wire = predicted * layout.padding_fraction
+    roof = Roofline(
+        flops_per_device=0.0, hbm_bytes_per_device=0.0,
+        wire_bytes_per_device=predicted - padding_wire,
+        padding_wire_bytes_per_device=padding_wire,
+        messages_per_device=cplan.arena_messages_per_device,
+        overlap_fraction=sched_arena.overlap_fraction,
+    )
+    return {
+        "arch": arch, "suite": "mem",
+        "page_bytes": int(page_bytes),
+        "bucket_mb": bucket_mb,
+        "channels": channels,
+        "transport": transport,
+        "mesh": "4x1",
+        "devices": n_dev,
+        "compile_s": compile_s,
+        "predicted_arena_bytes": layout.total_bytes,
+        "predicted_arena_pages": layout.n_pages,
+        "lowered_arena_elems": lowered_elems,
+        "arena_bytes_match": lowered_elems == layout.total_elems,
+        "padding_fraction": layout.padding_fraction,
+        "segment_waste": [s.waste for s in layout.segments],
+        "n_buckets": cplan.n_buckets,
+        "n_spans": layout.n_spans,
+        "hlo_allreduce_arena": n_ar_arena,
+        "hlo_allreduce_bucket": n_ar_bucket,
+        "predicted_wire_bytes": predicted,
+        "hlo_wire_bytes": measured,
+        "padding_wire_bytes": padding_wire,
+        "roofline": roof.as_dict(n_dev),
+        "arena": layout.describe() | {"segments": None, "spans": None},
+        "comm_plan": cplan.describe() | {"arena": None, "channels": None},
+    }
+
+
+def run_mem_suite(args, cache: dict) -> None:
+    """The ``--suite mem`` grid: page_bytes × bucket_mb × arch, each cell
+    asserting predicted arena bytes/pages/collective-counts against the
+    lowered HLO with zero tolerance."""
+    archs = (MEM_DEFAULT_ARCHS if args.arch == "all"
+             else args.arch.split(","))
+    pages = [int(s) for s in str(args.page_bytes).split(",")]
+    buckets = [float(s) for s in str(args.bucket_mb).split(",")]
+    for arch in archs:
+        for pb in pages:
+            for bmb in buckets:
+                grid = {"page_bytes": pb, "bucket_mb": bmb,
+                        "channels": args.channels}
+                key = cell_key(args.tag, arch, "mem", f"p{pb}", grid)
+                if key in cache and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[lower+compile] {key} ...", flush=True)
+                t0 = time.time()
+                try:
+                    rec = run_mem_cell(arch, pb, bmb,
+                                       channels=args.channels)
+                    rec["tag"] = args.tag
+                    cache[key] = rec
+                    print(f"  ok in {time.time()-t0:.1f}s: "
+                          f"arena={rec['predicted_arena_bytes']}B "
+                          f"pages={rec['predicted_arena_pages']} "
+                          f"pad={rec['padding_fraction']:.2%} "
+                          f"collectives {rec['hlo_allreduce_arena']}"
+                          f"(fused)/{rec['hlo_allreduce_bucket']}(bucket)",
+                          flush=True)
+                except Exception as e:
+                    cache[key] = {"error": str(e), "tag": args.tag,
+                                  "arch": arch, "shape": "mem"}
+                    print(f"  FAILED: {e}")
+                    traceback.print_exc()
+                with open(args.out, "w") as f:
+                    json.dump(cache, f, indent=1)
 
 
 STENCIL_MESH = {"single": ((4, 8, 8), 256), "multi": ((8, 8, 8), 512)}
@@ -470,11 +674,23 @@ def main() -> None:
                     help="issue schedule for the gradient reduction "
                          "(stream/scheduled overlap comm with backward "
                          "compute; reflected in t_exposed_collective)")
-    ap.add_argument("--suite", default="train", choices=["train", "stencil"],
+    ap.add_argument("--suite", default="train",
+                    choices=["train", "stencil", "mem"],
                     help="train: the arch x shape grid below; stencil: the "
                          "QCD workload — lattice-volume x halo-schedule "
                          "cells on a 3-D Cartesian mesh, checking HaloPlan "
-                         "predictions against lowered collective-permutes")
+                         "predictions against lowered collective-permutes; "
+                         "mem: the repro.mem arena grid — page_bytes x "
+                         "bucket_mb x arch cells asserting predicted arena "
+                         "bytes/pages/collective counts against lowered "
+                         "HLO with zero tolerance")
+    ap.add_argument("--page-bytes", default="4096,2097152",
+                    help="mem suite: comma-separated arena page sizes "
+                         "(default: 4 KiB small-page baseline and the "
+                         "paper's 2 MiB huge page)")
+    ap.add_argument("--bucket-mb", default="1",
+                    help="mem suite: comma-separated bucketer targets in "
+                         "MiB")
     ap.add_argument("--lattice", default="8",
                     help="stencil suite: comma-separated local lattice "
                          "extents (local volume = L^3 x 12 components)")
@@ -509,8 +725,11 @@ def main() -> None:
         with open(args.out) as f:
             cache = json.load(f)
 
-    if args.suite == "stencil":
-        run_stencil_suite(args, meshes, cache)
+    if args.suite in ("stencil", "mem"):
+        if args.suite == "stencil":
+            run_stencil_suite(args, meshes, cache)
+        else:
+            run_mem_suite(args, cache)
         n_ok = sum(1 for v in cache.values() if "error" not in v)
         n_err = sum(1 for v in cache.values() if "error" in v)
         print(f"done: {n_ok} ok, {n_err} failed -> {args.out}")

@@ -5,15 +5,17 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 tag in the shared dry-run JSON so report.py can diff baseline vs variants.
 
     PYTHONPATH=src python -m repro.launch.perf --arch llama3.2-1b \
-        --shape train_4k --tag wire_bf16 --set reduce_wire_dtype=bfloat16
+        --shape train_4k --tag wire_bf16 --set comm_wire_dtype=bfloat16
 
 Override keys: comm_transport, comm_channels, comm_chunks,
-comm_bidirectional, comm_wire_dtype, comm_bucket_bytes (any CommConfig
-field as comm_<field>), accum_microbatches, accum_policy, schedule
-(stream/scheduled issue order -> roofline overlap), causal_skip,
-serve_weights, fsdp_gather, gather_dtype, fsdp_bucket_bytes.  Legacy
-reduce_<field> keys still work; reduce_policy maps through the
-repro.comm transport registry.
+comm_bidirectional, comm_wire_dtype, comm_bucket_bytes, comm_page_bytes
+(any CommConfig field as comm_<field>), microbatches, schedule
+(stream/scheduled issue order -> roofline overlap), use_arena (fused
+page-aligned repro.mem reduction), causal_skip, serve_weights,
+fsdp_gather, gather_dtype, fsdp_bucket_bytes.  The legacy
+accum_microbatches / accum_policy spellings map onto microbatches /
+schedule; the old reduce_* string-policy keys are gone with the
+core.overlap shim — use comm_transport etc.
 """
 
 import argparse

@@ -148,6 +148,9 @@ class Roofline:
                                     # collective traffic issued while compute
                                     # remains (0 = serialised after compute)
     messages_per_device: float = 0.0  # collective launches (α latency term)
+    padding_wire_bytes_per_device: float = 0.0  # arena page padding that
+                                    # rides the fused collectives: wasted
+                                    # but *real* wire bytes (repro.mem)
     alpha_s: float = ALPHA_S
 
     @property
@@ -160,9 +163,12 @@ class Roofline:
 
     @property
     def t_collective(self) -> float:
-        """α·messages + bytes/bw (pure bandwidth when no count supplied)."""
+        """α·messages + bytes/bw (pure bandwidth when no count supplied).
+        Arena page padding is folded into the β term: fused spans carry it
+        across the wire, so the prediction charges for it."""
         return (self.alpha_s * self.messages_per_device
-                + self.wire_bytes_per_device / ICI_BW)
+                + (self.wire_bytes_per_device
+                   + self.padding_wire_bytes_per_device) / ICI_BW)
 
     @property
     def t_exposed_collective(self) -> float:
@@ -207,6 +213,8 @@ class Roofline:
             "hbm_bytes_per_device": self.hbm_bytes_per_device,
             "wire_bytes_per_device": self.wire_bytes_per_device,
             "messages_per_device": self.messages_per_device,
+            "padding_wire_bytes_per_device":
+                self.padding_wire_bytes_per_device,
             "t_compute_s": self.t_compute,
             "t_memory_s": self.t_memory,
             "t_collective_s": self.t_collective,

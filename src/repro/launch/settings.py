@@ -1,7 +1,15 @@
 """Per-architecture launch settings: DP mode, microbatching, serving weight
-residency, and the communication substrate (transport + virtual channels).
-Memory numbers derive from napkin math against 16 GB/chip (validated by
-``memory_analysis`` in the dry-run; see EXPERIMENTS.md §Dry-run)."""
+residency, and the communication substrate (transport + virtual channels +
+arena page size).  Memory numbers derive from napkin math against
+16 GB/chip (validated by ``memory_analysis`` in the dry-run; see
+EXPERIMENTS.md §Dry-run).
+
+``page_bytes`` is the :mod:`repro.mem` arena quantization granule — the
+paper's 2 MB huge page.  Communication buffers (``TrainStepConfig
+.use_arena``) are packed into segments whose offsets and sizes are
+quantized to it; larger pages mean fewer, better-aligned allocations at
+the cost of padding (the dry-run's ``--suite mem`` grid measures the
+trade)."""
 
 from __future__ import annotations
 
@@ -19,10 +27,13 @@ class ArchSettings:
     channels: int = 0       # virtual comm rails (0 = scheduler-unconstrained)
 
     def comm_config(self, *, chunks: int = 2,
-                    bucket_bytes: int = 256 * 2**20) -> CommConfig:
-        """The architecture's production communicator config."""
+                    bucket_bytes: int = 256 * 2**20,
+                    page_bytes: int = 2 * 2**20) -> CommConfig:
+        """The architecture's production communicator config
+        (``page_bytes``: arena granule, the paper's 2 MiB huge page)."""
         return CommConfig(transport=self.transport, channels=self.channels,
-                          chunks=chunks, bucket_bytes=bucket_bytes)
+                          chunks=chunks, bucket_bytes=bucket_bytes,
+                          page_bytes=page_bytes)
 
 
 SETTINGS: dict[str, ArchSettings] = {

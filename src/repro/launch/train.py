@@ -14,11 +14,9 @@ import dataclasses
 
 import jax
 
-from repro.comm import (CommConfig, POLICY_TO_TRANSPORT, SCHEDULE_POLICIES,
-                        list_transports)
+from repro.comm import CommConfig, SCHEDULE_POLICIES, list_transports
 from repro.configs import get_config, list_archs, reduced_config
 from repro.configs.base import ShapeConfig
-from repro.core.overlap import AccumConfig
 from repro.data import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.settings import settings_for
@@ -40,13 +38,15 @@ def main() -> None:
                     help="repro.comm transport (default: the arch's setting)")
     ap.add_argument("--channels", type=int, default=None,
                     help="virtual comm rails (0 = unconstrained)")
-    ap.add_argument("--policy", default=None,
-                    choices=tuple(POLICY_TO_TRANSPORT),
-                    help="DEPRECATED legacy policy name; maps to a transport")
     ap.add_argument("--dp-mode", default=None, choices=DP_MODES)
     ap.add_argument("--accum-policy", default=None, choices=SCHEDULE_POLICIES,
                     help="gradient-reduction issue schedule (default: "
                          "accumulate_then_reduce)")
+    ap.add_argument("--use-arena", action="store_true",
+                    help="reduce out of the page-aligned repro.mem "
+                         "CommArena (fused spans, donated buffer)")
+    ap.add_argument("--page-bytes", type=int, default=None,
+                    help="arena page size (default 2 MiB)")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 mesh (needs 256 devices)")
     ap.add_argument("--multi-pod", action="store_true")
@@ -69,20 +69,20 @@ def main() -> None:
                                       global_batch=args.batch),
                            model_cfg=cfg)
     ccfg = st.comm_config(bucket_bytes=32 * 2**20)
-    if args.policy:
-        transport, forced = POLICY_TO_TRANSPORT[args.policy]
-        ccfg = dataclasses.replace(ccfg, transport=transport, **forced)
     if args.transport:
         ccfg = dataclasses.replace(ccfg, transport=args.transport)
     if args.channels is not None:
         ccfg = dataclasses.replace(ccfg, channels=args.channels)
+    if args.page_bytes is not None:
+        ccfg = dataclasses.replace(ccfg, page_bytes=args.page_bytes)
     step_cfg = TrainStepConfig(
         dp_mode=args.dp_mode or (st.dp_mode if not args.reduced else "replicated"),
         comm=ccfg,
         optim=OptimConfig(base_lr=args.lr, warmup=min(20, args.steps // 5),
                           schedule=schedule, total_steps=args.steps),
-        accum=AccumConfig(microbatches=1 if args.reduced else st.microbatches),
-        schedule=args.accum_policy)
+        microbatches=1 if args.reduced else st.microbatches,
+        schedule=args.accum_policy or "accumulate_then_reduce",
+        use_arena=args.use_arena)
     trainer = Trainer(model, mesh, step_cfg, data, shape,
                       TrainerConfig(steps=args.steps, ckpt_every=50,
                                     ckpt_dir=args.ckpt_dir, log_every=10))

@@ -1,0 +1,23 @@
+"""repro.mem — page-aligned communication-buffer arenas.
+
+The paper's memory pillar as a subsystem: :mod:`repro.mem.layout` plans a
+page-quantized :class:`ArenaLayout` (segments per bucket, fused spans per
+virtual channel, padding/fragmentation accounting) and
+:mod:`repro.mem.arena` executes it (:class:`CommArena`: allocate-once,
+donate-every-step pack/unpack with jnp and Pallas flat-copy paths).
+``Communicator.reduce_scheduled(..., arena=...)`` reduces contiguous arena
+spans instead of bucket pytrees; ``TrainStepConfig.use_arena`` threads it
+through all three DP modes.
+"""
+
+from repro.mem.arena import CommArena, PACK_IMPLS
+from repro.mem.layout import (ArenaLayout, ArenaSegment, ArenaSpan,
+                              PAGE_BYTES, arena_from_bucket_plan,
+                              arena_from_halo_plan, fuse_schedule,
+                              plan_arena)
+
+__all__ = [
+    "ArenaLayout", "ArenaSegment", "ArenaSpan", "CommArena", "PACK_IMPLS",
+    "PAGE_BYTES", "arena_from_bucket_plan", "arena_from_halo_plan",
+    "fuse_schedule", "plan_arena",
+]

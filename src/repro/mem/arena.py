@@ -1,0 +1,137 @@
+"""CommArena: allocate-once, donate-every-step communication buffers.
+
+The executable half of :mod:`repro.mem.layout`: a :class:`CommArena` owns
+an :class:`~repro.mem.layout.ArenaLayout` and moves flat buckets in and out
+of the arena buffer.
+
+The persistence contract mirrors the paper's pre-registered huge-page
+buffers: the arena is allocated **once** (as part of the train state) and
+threaded through the jitted step as a **donated** argument, so XLA aliases
+the input buffer to the output and every step reuses the same page-aligned
+allocation — no per-step transient comm buffers.  Packing therefore writes
+*into* the existing buffer (:meth:`pack_into`, N aliased segment copies)
+rather than concatenating a fresh one; the page-padding gaps keep whatever
+bytes they held (they are never read back), exactly like the slack of a
+pinned registration.
+
+Both directions ship two implementations, selected by ``impl``:
+
+* ``"jnp"``    — ``dynamic_update_slice`` / ``slice`` reference path;
+* ``"pallas"`` — the :mod:`repro.kernels.pack` flat-copy kernels
+  (lane-tiled, in-place via ``input_output_aliases``; interpret mode
+  off-TPU), with automatic fallback to the reference for unaligned shapes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.mem.layout import ArenaLayout
+
+PACK_IMPLS = ("jnp", "pallas")
+
+
+@dataclass(frozen=True)
+class CommArena:
+    """One persistent, page-aligned communication buffer + its layout."""
+
+    layout: ArenaLayout
+    impl: str = "jnp"
+
+    def __post_init__(self):
+        if self.impl not in PACK_IMPLS:
+            raise ValueError(f"impl must be one of {PACK_IMPLS}, "
+                             f"got {self.impl!r}")
+
+    # -- allocation ----------------------------------------------------------
+
+    def zeros(self) -> jax.Array:
+        """A fresh zero arena (the allocate-once step-state initialiser)."""
+        return jnp.zeros((self.layout.total_elems,), self.layout.dtype)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((self.layout.total_elems,),
+                                    jnp.dtype(self.layout.dtype))
+
+    # -- pack / unpack (run inside jit / shard_map) --------------------------
+
+    def _write(self, arena: jax.Array, src: jax.Array, offset: int
+               ) -> jax.Array:
+        if self.impl == "pallas":
+            from repro.kernels.pack import write_flat
+
+            return write_flat(arena, src, offset)
+        from repro.kernels.pack import ref
+
+        return ref.write_flat(arena, src, offset)
+
+    def _read(self, arena: jax.Array, offset: int, size: int) -> jax.Array:
+        if self.impl == "pallas":
+            from repro.kernels.pack import read_flat
+
+            return read_flat(arena, offset, size)
+        from repro.kernels.pack import ref
+
+        return ref.read_flat(arena, offset, size)
+
+    def pack_into(self, arena: jax.Array, buffers: Sequence[jax.Array]
+                  ) -> jax.Array:
+        """Write ``buffers[i]`` into segment ``i``'s slot of ``arena``.
+
+        ``buffers`` are the flat buckets in bucket-id order (the bucketer's
+        output).  Padding gaps keep the arena's previous contents — pass a
+        donated step-state buffer here so XLA updates it in place.
+        """
+        lay = self.layout
+        if len(buffers) != lay.n_segments:
+            raise ValueError(f"arena has {lay.n_segments} segments, got "
+                             f"{len(buffers)} buffers")
+        if arena.shape != (lay.total_elems,):
+            raise ValueError(f"arena shape {arena.shape} != "
+                             f"({lay.total_elems},)")
+        for seg in lay.segments:
+            b = buffers[seg.bucket].reshape(-1)
+            if b.shape[0] != seg.size:
+                raise ValueError(f"bucket {seg.bucket} has {b.shape[0]} "
+                                 f"elems, segment expects {seg.size}")
+            arena = self._write(arena, b.astype(lay.dtype), seg.offset)
+        return arena
+
+    def pack(self, buffers: Sequence[jax.Array]) -> jax.Array:
+        """Fresh arena with ``buffers`` packed and padding zeroed (the
+        reference entry point; prefer :meth:`pack_into` on the persistent
+        donated buffer inside the step)."""
+        return self.pack_into(self.zeros(), buffers)
+
+    def unpack(self, arena: jax.Array) -> list[jax.Array]:
+        """Segment payloads out of ``arena``, indexed by bucket id."""
+        lay = self.layout
+        if arena.shape != (lay.total_elems,):
+            raise ValueError(f"arena shape {arena.shape} != "
+                             f"({lay.total_elems},)")
+        out: list[jax.Array | None] = [None] * lay.n_segments
+        for seg in lay.segments:
+            out[seg.bucket] = self._read(arena, seg.offset, seg.size)
+        return out
+
+    def unpack_spans(self, spans: Sequence[jax.Array]) -> list[jax.Array]:
+        """Bucket payloads out of per-span buffers (e.g. all-gathered
+        ZeRO spans), indexed by bucket id."""
+        lay = self.layout
+        if len(spans) != lay.n_spans:
+            raise ValueError(f"arena has {lay.n_spans} spans, got "
+                             f"{len(spans)}")
+        out: list[jax.Array | None] = [None] * lay.n_segments
+        for idx, sp in enumerate(lay.spans):
+            buf = spans[idx].reshape(-1)
+            if buf.shape[0] != sp.size:
+                raise ValueError(f"span {idx} has {buf.shape[0]} elems, "
+                                 f"expected {sp.size}")
+            for b in sp.buckets:
+                seg = lay.segment_of(b)
+                out[b] = self._read(buf, seg.offset - sp.offset, seg.size)
+        return out

@@ -1,0 +1,346 @@
+"""ArenaLayout: page-quantized placement of communication buffers.
+
+The paper's third pillar: near-wirespeed collectives are only *robust* when
+the buffers they reduce out of come from carefully allocated 2 MB huge
+pages (the libhugetlbfs LD_PRELOAD trick) — large, stable, fused
+allocations instead of many small transient ones.  The TPU/XLA analogue is
+a single flat **arena** per gradient pytree:
+
+* every :class:`~repro.core.bucketing.BucketPlan` bucket (or halo face
+  payload) becomes an :class:`ArenaSegment` whose element offset and padded
+  size are quantized to ``page_bytes`` (default 2 MiB), so segment starts
+  can never straddle a page and the allocation is exactly a whole number of
+  pages;
+* segments sharing a virtual channel are laid out contiguously and fused
+  into an :class:`ArenaSpan` — one collective per span moves the paper's
+  "fewer, larger, aligned messages" instead of one per bucket (the
+  :class:`~repro.comm.plan.LatencyModel` α-term prices exactly this);
+* the page padding is accounted per segment (waste/fragmentation) and in
+  aggregate (:attr:`ArenaLayout.padding_fraction`), because in arena mode
+  the padding *does* cross the wire — the roofline folds it into the
+  wire-byte prediction rather than pretending it is free.
+
+An oversized bucket (a single pytree leaf larger than the bucketer's
+``bucket_bytes`` target — the bucketer never splits leaves) is handled as a
+dedicated page-aligned segment like any other, but a warning is emitted
+once so silent target overruns are visible (see
+``GradientBucketer``'s oversized-leaf invariant).
+
+This module deliberately depends only on :mod:`repro.core` and
+:mod:`repro.comm.schedule` (never :mod:`repro.comm.api`), so
+``repro.comm`` can import it without a cycle.
+"""
+
+from __future__ import annotations
+
+import math
+import warnings
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from repro.comm.schedule import CommSchedule, IssueSlot
+from repro.core.bucketing import BucketPlan
+from repro.core.topology import padded_size
+
+PAGE_BYTES = 2 * 2**20     # the paper's huge-page size
+
+
+@dataclass(frozen=True)
+class ArenaSegment:
+    """One source buffer's page-quantized slot inside the arena."""
+
+    bucket: int        # source bucket / unit id
+    channel: int       # virtual channel carrying this segment
+    offset: int        # element offset into the arena (quantum-aligned)
+    size: int          # used elements (the source buffer's length)
+    padded: int        # quantum-aligned element count (>= size)
+
+    @property
+    def padding(self) -> int:
+        return self.padded - self.size
+
+    @property
+    def waste(self) -> float:
+        """This segment's fragmentation: padding share of its footprint."""
+        return self.padding / self.padded if self.padded else 0.0
+
+
+@dataclass(frozen=True)
+class ArenaSpan:
+    """A contiguous run of same-channel segments — one fused collective."""
+
+    channel: int
+    buckets: tuple[int, ...]   # member bucket ids, in arena order
+    offset: int                # element offset of the first segment
+    size: int                  # padded elements covered (incl. padding)
+
+
+@dataclass(frozen=True)
+class ArenaLayout:
+    """Placement of one pytree's communication buffers in one flat arena."""
+
+    dtype: object              # jnp dtype of the arena
+    page_bytes: int            # requested page size (allocation granule)
+    quantum: int               # element quantization unit (see plan_arena)
+    segments: tuple[ArenaSegment, ...]   # in arena (offset) order
+    spans: tuple[ArenaSpan, ...]
+
+    # -- shape ---------------------------------------------------------------
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def n_spans(self) -> int:
+        return len(self.spans)
+
+    @property
+    def total_elems(self) -> int:
+        last = self.segments[-1] if self.segments else None
+        return last.offset + last.padded if last else 0
+
+    @property
+    def total_bytes(self) -> int:
+        return self.total_elems * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def n_pages(self) -> int:
+        """Whole pages the arena allocates (total is page-quantized)."""
+        return -(-self.total_bytes // self.page_bytes)
+
+    # -- padding accounting --------------------------------------------------
+
+    @property
+    def used_elems(self) -> int:
+        return sum(s.size for s in self.segments)
+
+    @property
+    def padding_elems(self) -> int:
+        return self.total_elems - self.used_elems
+
+    @property
+    def padding_fraction(self) -> float:
+        t = self.total_elems
+        return self.padding_elems / t if t else 0.0
+
+    # -- lookup --------------------------------------------------------------
+
+    def segment_of(self, bucket: int) -> ArenaSegment:
+        for s in self.segments:
+            if s.bucket == bucket:
+                return s
+        raise KeyError(bucket)
+
+    def span_of(self, bucket: int) -> ArenaSpan:
+        for sp in self.spans:
+            if bucket in sp.buckets:
+                return sp
+        raise KeyError(bucket)
+
+    def validate(self) -> None:
+        """Structural invariants the executors rely on."""
+        end = 0
+        by_bucket = {}
+        for s in self.segments:
+            if s.offset % self.quantum or s.padded % self.quantum:
+                raise ValueError(f"segment {s.bucket}: offset/padded not "
+                                 f"quantized to {self.quantum} elems")
+            if s.offset < end:
+                raise ValueError(f"segment {s.bucket} overlaps its "
+                                 f"predecessor ({s.offset} < {end})")
+            if s.size > s.padded:
+                raise ValueError(f"segment {s.bucket}: size {s.size} > "
+                                 f"padded {s.padded}")
+            end = s.offset + s.padded
+            by_bucket[s.bucket] = s
+        for sp in self.spans:
+            segs = [by_bucket[b] for b in sp.buckets]
+            if not segs:
+                raise ValueError("empty span")
+            if sp.offset != segs[0].offset:
+                raise ValueError(f"span@{sp.offset}: first segment at "
+                                 f"{segs[0].offset}")
+            if sp.size != sum(s.padded for s in segs):
+                raise ValueError(f"span@{sp.offset}: size {sp.size} != "
+                                 f"member total")
+            run = sp.offset
+            for s in segs:
+                if s.offset != run or s.channel != sp.channel:
+                    raise ValueError(f"span@{sp.offset}: segment "
+                                     f"{s.bucket} not contiguous on "
+                                     f"channel {sp.channel}")
+                run += s.padded
+
+    def describe(self) -> dict:
+        """JSON-friendly summary for the dry-run report."""
+        return {
+            "page_bytes": self.page_bytes,
+            "quantum_elems": self.quantum,
+            "dtype": jnp.dtype(self.dtype).name,
+            "n_segments": self.n_segments,
+            "n_spans": self.n_spans,
+            "total_elems": self.total_elems,
+            "total_bytes": self.total_bytes,
+            "n_pages": self.n_pages,
+            "padding_elems": self.padding_elems,
+            "padding_fraction": self.padding_fraction,
+            "segments": [{"bucket": s.bucket, "channel": s.channel,
+                          "offset": s.offset, "size": s.size,
+                          "padded": s.padded, "waste": s.waste}
+                         for s in self.segments],
+            "spans": [{"channel": sp.channel, "buckets": list(sp.buckets),
+                       "offset": sp.offset, "size": sp.size}
+                      for sp in self.spans],
+        }
+
+
+# emit the oversized-bucket warning once per process, not once per plan
+_warned_oversized = False
+
+
+def plan_arena(sizes: Sequence[int], *, page_bytes: int = PAGE_BYTES,
+               dtype=jnp.float32, channel_of: Sequence[int] | None = None,
+               pad_multiple: int = 1, bucket_bytes: int | None = None,
+               warn_oversized: bool = True) -> ArenaLayout:
+    """Pack flat buffers of ``sizes`` elements into one page-quantized arena.
+
+    ``channel_of[i]`` is the virtual channel carrying buffer ``i`` (default:
+    every buffer its own channel — no fusing, matching ``channels == 0``).
+    Buffers are laid out grouped by channel (ascending, original order
+    within a channel), so each channel's segments form one contiguous
+    :class:`ArenaSpan`.
+
+    The quantization unit is ``lcm(page_bytes / itemsize, pad_multiple)``:
+    page alignment *and* the transport's flat-buffer divisor (so a fused
+    span can still be ring reduce-scattered).  ``bucket_bytes``, when given,
+    is the bucketer's target size; any buffer exceeding it (an oversized
+    pytree leaf the bucketer refused to split) still gets its dedicated
+    page-aligned segment, but a warning is emitted once per process —
+    ``warn_oversized=False`` suppresses it for pure-prediction callers
+    (e.g. :meth:`repro.comm.Communicator.plan`, which lays out the arena
+    for every dry-run cell whether or not arena mode runs).
+    """
+    dtype = jnp.dtype(dtype)
+    if page_bytes <= 0 or page_bytes % dtype.itemsize:
+        raise ValueError(f"page_bytes must be a positive multiple of the "
+                         f"itemsize ({dtype.itemsize}), got {page_bytes}")
+    if pad_multiple <= 0:
+        raise ValueError(f"pad_multiple must be positive, got {pad_multiple}")
+    sizes = [int(n) for n in sizes]
+    if channel_of is None:
+        channel_of = list(range(len(sizes)))
+    if len(channel_of) != len(sizes):
+        raise ValueError(f"channel_of has {len(channel_of)} entries for "
+                         f"{len(sizes)} buffers")
+    quantum = math.lcm(page_bytes // dtype.itemsize, int(pad_multiple))
+
+    if bucket_bytes is not None and warn_oversized:
+        oversized = [i for i, n in enumerate(sizes)
+                     if n * dtype.itemsize > bucket_bytes]
+        global _warned_oversized
+        if oversized and not _warned_oversized:
+            _warned_oversized = True
+            warnings.warn(
+                f"{len(oversized)} bucket(s) exceed the {bucket_bytes}-byte "
+                f"target (oversized pytree leaves are never split); each "
+                f"gets a dedicated page-aligned arena segment "
+                f"(ids {oversized[:8]}{'...' if len(oversized) > 8 else ''})",
+                RuntimeWarning, stacklevel=2)
+
+    # channel-grouped order: each channel's buffers land contiguously
+    order = sorted(range(len(sizes)), key=lambda i: (channel_of[i], i))
+    segments: list[ArenaSegment] = []
+    spans: list[ArenaSpan] = []
+    offset = 0
+    for i in order:
+        padded = padded_size(max(sizes[i], 1), quantum)
+        seg = ArenaSegment(bucket=i, channel=int(channel_of[i]),
+                           offset=offset, size=sizes[i], padded=padded)
+        segments.append(seg)
+        if spans and spans[-1].channel == seg.channel:
+            last = spans[-1]
+            spans[-1] = ArenaSpan(channel=last.channel,
+                                  buckets=last.buckets + (i,),
+                                  offset=last.offset,
+                                  size=last.size + padded)
+        else:
+            spans.append(ArenaSpan(channel=seg.channel, buckets=(i,),
+                                   offset=offset, size=padded))
+        offset += padded
+
+    layout = ArenaLayout(dtype=dtype, page_bytes=int(page_bytes),
+                         quantum=quantum, segments=tuple(segments),
+                         spans=tuple(spans))
+    layout.validate()
+    return layout
+
+
+def arena_from_bucket_plan(plan: BucketPlan, *,
+                           page_bytes: int = PAGE_BYTES,
+                           channel_of: Sequence[int] | None = None,
+                           pad_multiple: int = 1,
+                           bucket_bytes: int | None = None,
+                           warn_oversized: bool = True) -> ArenaLayout:
+    """Arena layout for a :class:`~repro.core.bucketing.BucketPlan`: one
+    segment per bucket, in the plan's dtype."""
+    return plan_arena(plan.bucket_sizes, page_bytes=page_bytes,
+                      dtype=plan.bucket_dtype, channel_of=channel_of,
+                      pad_multiple=max(pad_multiple, plan.pad_multiple),
+                      bucket_bytes=bucket_bytes,
+                      warn_oversized=warn_oversized)
+
+
+def arena_from_halo_plan(halo_plan, *, page_bytes: int = PAGE_BYTES,
+                         itemsize: int = 4, dtype=jnp.float32,
+                         pad_multiple: int = 1) -> ArenaLayout:
+    """Arena layout for halo face payloads: one segment per exchange unit
+    of a :class:`~repro.comm.plan.HaloPlan` (whose ``unit_bytes`` are
+    *bytes*; segments here are elements), grouped by the plan's halo
+    channels so each rail's faces fuse into one contiguous span."""
+    sizes = [-(-int(b) // itemsize) for b in halo_plan.unit_bytes]
+    chan_of = [0] * len(sizes)
+    for hc in halo_plan.channels:
+        for u in hc.units:
+            chan_of[u] = hc.channel
+    return plan_arena(sizes, page_bytes=page_bytes, dtype=dtype,
+                      channel_of=chan_of, pad_multiple=pad_multiple)
+
+
+def fuse_schedule(schedule: CommSchedule, layout: ArenaLayout
+                  ) -> CommSchedule:
+    """The span-level :class:`~repro.comm.schedule.CommSchedule` an arena
+    executor runs: per phase, each :class:`ArenaSpan` issues **one**
+    collective covering its members' contiguous segments (padding
+    included).  Slot ``bucket_ids`` index :attr:`ArenaLayout.spans`;
+    ``bucket_sizes`` are span element counts, so ``overlap_fraction`` stays
+    traffic-weighted.  A span becomes ready only when its *last* member
+    does, so fused overlap is never optimistically higher than the
+    per-bucket schedule's."""
+    if layout.n_segments != schedule.n_buckets:
+        raise ValueError(
+            f"layout has {layout.n_segments} segments but the schedule has "
+            f"{schedule.n_buckets} buckets; build both from the same plan")
+    phases = sorted({s.phase for s in schedule.slots})
+    span_sizes = tuple(sp.size for sp in layout.spans)
+    slots: list[IssueSlot] = []
+    for phase in phases:
+        ready_of = {}
+        for s in schedule.slots_for_phase(phase):
+            for b in s.bucket_ids:
+                ready_of[b] = max(ready_of.get(b, 0.0), s.ready)
+        phase_slots = []
+        for idx, sp in enumerate(layout.spans):
+            ready = max(ready_of[b] for b in sp.buckets)
+            phase_slots.append(IssueSlot(phase=phase, bucket_ids=(idx,),
+                                         channel=sp.channel, ready=ready))
+        slots.extend(sorted(phase_slots,
+                            key=lambda s: (s.ready, s.channel)))
+    fused = CommSchedule(policy=schedule.policy,
+                         microbatches=schedule.microbatches,
+                         bucket_sizes=span_sizes,
+                         channels=schedule.channels, slots=tuple(slots))
+    fused.validate()
+    return fused

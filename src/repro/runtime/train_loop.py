@@ -54,7 +54,18 @@ class Trainer:
         self.state = state
         self.start_step = 0
         if self.ckpt is not None:
-            restored, step = self.ckpt.restore_latest(self.state)
+            try:
+                restored, step = self.ckpt.restore_latest(self.state)
+            except ValueError as e:
+                if "strict=False" not in str(e):
+                    raise
+                # structural change (e.g. toggling use_arena's scratch comm
+                # buffer): retry path-matched, loudly — leaves absent from
+                # the checkpoint keep their fresh-init values
+                restored, step = self.ckpt.restore_latest(self.state,
+                                                          strict=False)
+                self.log(f"[trainer] state structure changed since the "
+                         f"checkpoint; resumed by path matching ({e})")
             if restored is not None:
                 self.state = restored
                 self.start_step = int(step)

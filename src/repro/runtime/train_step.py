@@ -30,6 +30,15 @@ executes a :class:`repro.comm.schedule.CommSchedule`
 (:func:`build_step_schedule`) via ``Communicator.reduce_scheduled``, so
 streamed per-bucket reduction overlaps with remaining backward compute and
 the dry-run/roofline layers can predict the exposed communication.
+
+``use_arena`` switches all three modes onto the :mod:`repro.mem`
+communication arena: gradients pack into one page-aligned, allocate-once
+buffer carried in the train state and **donated** through the jitted step
+(XLA reuses the allocation in place, the paper's persistent huge-page
+registration).  ``replicated`` all-reduces fused contiguous spans (fewer,
+larger, aligned messages); ``zero1`` reduce-scatters span shards; ``fsdp``
+uses the arena as its microbatch accumulation buffer (its reduction rides
+the gather transpose, so only buffer residency changes).
 """
 
 from __future__ import annotations
@@ -47,8 +56,9 @@ from repro import compat
 from repro.comm import CommConfig, Communicator
 from repro.comm.schedule import CommSchedule, SCHEDULE_POLICIES, build_schedule
 from repro.core.bucketing import BucketPlan
-from repro.core.overlap import AccumConfig
 from repro.core.reducer import ReduceConfig
+from repro.mem.arena import CommArena
+from repro.mem.layout import ArenaLayout, plan_arena
 from repro.models.model_api import Model
 from repro.models.parallel import ParallelCtx
 from repro.optim import (OptimConfig, adamw_flat_update, adamw_tree_update,
@@ -66,9 +76,10 @@ class TrainStepConfig:
     comm: CommConfig | None = None     # preferred: the Communicator config
     reduce: ReduceConfig = field(default_factory=ReduceConfig)  # legacy
     optim: OptimConfig = field(default_factory=OptimConfig)
-    accum: AccumConfig = field(default_factory=AccumConfig)
-    schedule: str | None = None        # SCHEDULE_POLICIES member; None ->
-                                       # fall back to accum.policy
+    microbatches: int = 1              # grad-accumulation slices
+    schedule: str = "accumulate_then_reduce"  # SCHEDULE_POLICIES member
+    use_arena: bool = False            # repro.mem CommArena (page-aligned,
+                                       # donated, fused-span collectives)
     causal_skip: bool = False
     gather_dtype: str = "bfloat16"     # fsdp weight-gather wire dtype
     fsdp_bucket_bytes: int = 512 * 2**20
@@ -83,14 +94,11 @@ class TrainStepConfig:
 
     @property
     def schedule_policy(self) -> str:
-        """The schedule family the step executes: the new-style ``schedule``
-        field, else the legacy ``accum.policy`` mapped onto its canned
-        schedule."""
-        pol = self.schedule if self.schedule is not None else self.accum.policy
-        if pol not in SCHEDULE_POLICIES:
-            raise ValueError(f"unknown schedule policy {pol!r}; one of "
-                             f"{SCHEDULE_POLICIES}")
-        return pol
+        """The (validated) issue-schedule family the step executes."""
+        if self.schedule not in SCHEDULE_POLICIES:
+            raise ValueError(f"unknown schedule policy {self.schedule!r}; "
+                             f"one of {SCHEDULE_POLICIES}")
+        return self.schedule
 
 
 # ---------------------------------------------------------------------------
@@ -187,6 +195,23 @@ def build_norm_weights(plan: BucketPlan, specs_flat: list, model_size: int
     return weights
 
 
+def build_span_norm_weights(layout: ArenaLayout,
+                            bucket_weights: list[np.ndarray]
+                            ) -> list[np.ndarray]:
+    """Per-*span* norm weights for the arena ZeRO path: each span's vector
+    is its member buckets' weights at their intra-span offsets, zero on the
+    page padding (padding elements must never count in the grad norm)."""
+    out = []
+    for sp in layout.spans:
+        w = np.zeros((sp.size,), np.float32)
+        for b in sp.buckets:
+            seg = layout.segment_of(b)
+            off = seg.offset - sp.offset
+            w[off:off + seg.size] = bucket_weights[b]
+        out.append(w)
+    return out
+
+
 def _slice_like_shard(w: jax.Array, axes: tuple[str, ...]) -> jax.Array:
     """Slice a per-bucket weight vector down to this rank's RS-shard, using
     the same ownership layout as hierarchical reduce-scatter (inner axis
@@ -237,6 +262,16 @@ class FsdpPlan:
                 self.groups[f"root.{k}"] = local[k]
         self.plans = {name: self.bucketer.plan(tree)
                       for name, tree in self.groups.items()}
+        # arena accumulation buffer: one segment per group-bucket *shard*,
+        # in grads-tree leaf order (dicts flatten key-sorted)
+        self.arena_layout: ArenaLayout | None = None
+        if cfg.use_arena:
+            shard_sizes = [n // max(self.dp_world, 1)
+                           for name in sorted(self.plans)
+                           for n in self.plans[name].bucket_sizes]
+            self.arena_layout = plan_arena(
+                shard_sizes, page_bytes=self.comm.cfg.page_bytes,
+                dtype=jnp.float32)
         # static norm-accounting weights per group (model-replication aware)
         msize = _sizes(mesh).get("model", 1)
         self.norm_weights = {}
@@ -329,30 +364,54 @@ def init_train_state(model: Model, mesh: Mesh, cfg: TrainStepConfig,
     flat = _flat_spec(mesh)
     key = key if key is not None else jax.random.key(0)
 
+    # use_arena: the persistent page-aligned comm buffer lives in the state
+    # (one flat leaf, donated with the rest), so every step reuses the same
+    # allocation — the paper's allocate-once registration
+    arena_elems = 0
+
     if cfg.dp_mode == "replicated":
         specs = {"params": pspecs, "opt": {"mu": pspecs, "nu": pspecs},
                  "step": P()}
+        if cfg.use_arena:
+            comm = build_comm(mesh, cfg)
+            local = _local_shapes(model.abstract_params(), pspecs, mesh)
+            arena_elems = comm.arena_layout(local).total_elems
+            specs["arena"] = flat
 
         def mk(k):
             p_local = _slice_to_local(model.init(k), pspecs)
-            return {"params": p_local, "opt": init_opt_state(p_local),
-                    "step": jnp.zeros((), jnp.int32)}
+            state = {"params": p_local, "opt": init_opt_state(p_local),
+                     "step": jnp.zeros((), jnp.int32)}
+            if cfg.use_arena:
+                state["arena"] = jnp.zeros((arena_elems,), jnp.float32)
+            return state
 
     elif cfg.dp_mode == "zero1":
         comm = build_comm(mesh, cfg)
         local = _local_shapes(model.abstract_params(), pspecs, mesh)
         plan = comm.bucketer.plan(local)
-        shard_sizes = [n // comm.world for n in plan.bucket_sizes]
+        if cfg.use_arena:
+            # optimizer shards follow the fused-span layout, not the buckets
+            layout = comm.arena_layout(local)
+            arena_elems = layout.total_elems
+            shard_sizes = [sp.size // comm.world for sp in layout.spans]
+        else:
+            shard_sizes = [n // comm.world for n in plan.bucket_sizes]
         specs = {"params": pspecs,
                  "opt": {"mu": [flat] * len(shard_sizes),
                          "nu": [flat] * len(shard_sizes)},
                  "step": P()}
+        if cfg.use_arena:
+            specs["arena"] = flat
 
         def mk(k):
             p_local = _slice_to_local(model.init(k), pspecs)
             zeros = lambda: [jnp.zeros((n,), jnp.float32) for n in shard_sizes]
-            return {"params": p_local, "opt": {"mu": zeros(), "nu": zeros()},
-                    "step": jnp.zeros((), jnp.int32)}
+            state = {"params": p_local, "opt": {"mu": zeros(), "nu": zeros()},
+                     "step": jnp.zeros((), jnp.int32)}
+            if cfg.use_arena:
+                state["arena"] = jnp.zeros((arena_elems,), jnp.float32)
+            return state
 
     elif cfg.dp_mode == "fsdp":
         plan = FsdpPlan(model, mesh, cfg)
@@ -361,14 +420,20 @@ def init_train_state(model: Model, mesh: Mesh, cfg: TrainStepConfig,
         specs = {"groups": spec_groups,
                  "opt": {"mu": spec_groups, "nu": spec_groups},
                  "step": P()}
+        if cfg.use_arena:
+            arena_elems = plan.arena_layout.total_elems
+            specs["arena"] = flat
 
         def mk(k):
             p_local = _slice_to_local(model.init(k), pspecs)
             groups = plan.shard_state(p_local)
             zeros = lambda: jax.tree.map(
                 lambda s: jnp.zeros_like(s, jnp.float32), groups)
-            return {"groups": groups, "opt": {"mu": zeros(), "nu": zeros()},
-                    "step": jnp.zeros((), jnp.int32)}
+            state = {"groups": groups, "opt": {"mu": zeros(), "nu": zeros()},
+                     "step": jnp.zeros((), jnp.int32)}
+            if cfg.use_arena:
+                state["arena"] = jnp.zeros((arena_elems,), jnp.float32)
+            return state
 
     else:
         raise ValueError(f"dp_mode must be one of {DP_MODES}")
@@ -395,19 +460,24 @@ def build_step_schedule(model: Model, mesh: Mesh, cfg: TrainStepConfig
     records and the roofline's overlap fraction reads).
 
     ``replicated`` / ``zero1`` derive issue slots from the communicator's
-    bucket layout of the local gradient tree.  ``fsdp`` always reports the
-    ``scheduled`` readiness model regardless of the configured policy: its
-    reduce-scatter is the autodiff transpose of the per-layer weight gather,
-    so streaming in backward readiness order is *intrinsic* — the accum
-    policy only shapes local shard accumulation, never serialises comm.
+    bucket layout of the local gradient tree — span-level
+    (:meth:`~repro.comm.Communicator.arena_schedule`) when ``use_arena``
+    fuses each channel's contiguous arena span into one collective.
+    ``fsdp`` always reports the ``scheduled`` readiness model regardless of
+    the configured policy: its reduce-scatter is the autodiff transpose of
+    the per-layer weight gather, so streaming in backward readiness order
+    is *intrinsic* — the schedule policy only shapes local shard
+    accumulation, never serialises comm.
     """
     policy = cfg.schedule_policy
-    m = cfg.accum.microbatches
+    m = cfg.microbatches
     if cfg.dp_mode == "fsdp":
         return _fsdp_schedule(FsdpPlan(model, mesh, cfg), m)
     comm = build_comm(mesh, cfg)
     pspecs = model.param_specs(mesh)
     local = _local_shapes(model.abstract_params(), pspecs, mesh)
+    if cfg.use_arena:
+        return comm.arena_schedule(local, policy, m)
     return comm.schedule(local, policy, m)
 
 
@@ -434,8 +504,10 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
         comm = build_comm(mesh, cfg)
         local_abs = _local_shapes(model.abstract_params(), pspecs, mesh)
         # single source with the dry-run's prediction: the schedule the step
-        # executes IS the one build_step_schedule reports
+        # executes IS the one build_step_schedule reports (span-level when
+        # the arena fuses each channel into one collective)
         comm_sched = build_step_schedule(model, mesh, cfg)
+        comm_arena = comm.arena(local_abs) if cfg.use_arena else None
         zero1_norm_weights = None
         if cfg.dp_mode == "zero1":
             if not comm.spec.supports_rs:
@@ -448,6 +520,10 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                 pspecs, is_leaf=lambda x: isinstance(x, P))[0]
             zero1_norm_weights = build_norm_weights(
                 z1_plan, specs_flat, _sizes(mesh).get("model", 1))
+            if comm_arena is not None:
+                # shards follow the fused spans; padding weighs zero
+                zero1_norm_weights = build_span_norm_weights(
+                    comm_arena.layout, zero1_norm_weights)
 
         def step_fn(state, batch):
             def gfn(p, mb):
@@ -459,10 +535,17 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                 (loss, _), g = jax.value_and_grad(gfn, has_aux=True)(p, mb)
                 return loss, g
 
+            new_arena = None
             if cfg.dp_mode == "replicated":
-                loss, grads = comm.reduce_scheduled(
-                    grad_fn, state["params"], batch, comm_sched,
-                    op="all_reduce")
+                if comm_arena is not None:
+                    loss, (grads, new_arena) = comm.reduce_scheduled(
+                        grad_fn, state["params"], batch, comm_sched,
+                        op="all_reduce", arena=comm_arena,
+                        arena_buf=state["arena"])
+                else:
+                    loss, grads = comm.reduce_scheduled(
+                        grad_fn, state["params"], batch, comm_sched,
+                        op="all_reduce")
                 gnorm = global_grad_norm(grads, pspecs, ctx)
                 factor = clip_factor(gnorm, cfg.optim.clip_norm)
                 grads = jax.tree.map(lambda g: g * factor, grads)
@@ -474,9 +557,15 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                              "step": state["step"] + 1}
             else:  # zero1: buckets reduce-scatter as their microbatch's
                    # backward finishes (streamed ZeRO); shards accumulate
-                loss, (shards, plan) = comm.reduce_scheduled(
-                    grad_fn, state["params"], batch, comm_sched,
-                    op="reduce_scatter")
+                if comm_arena is not None:
+                    loss, (shards, plan, new_arena) = comm.reduce_scheduled(
+                        grad_fn, state["params"], batch, comm_sched,
+                        op="reduce_scatter", arena=comm_arena,
+                        arena_buf=state["arena"])
+                else:
+                    loss, (shards, plan) = comm.reduce_scheduled(
+                        grad_fn, state["params"], batch, comm_sched,
+                        op="reduce_scatter")
                 # exact global norm over the *reduced* gradient: weight
                 # model-replicated fields by 1/model_size before the psum
                 ordered = comm.ordered_axes
@@ -491,7 +580,12 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                 deltas, new_opt = adamw_flat_update(shards, state["opt"],
                                                     state["step"], lr,
                                                     cfg.optim)
-                delta_tree = comm.all_gather_buckets(deltas, plan)
+                if comm_arena is not None:
+                    spans = comm.all_gather(deltas)
+                    delta_tree = comm.bucketer.debucketize(
+                        comm_arena.unpack_spans(spans), plan)
+                else:
+                    delta_tree = comm.all_gather_buckets(deltas, plan)
                 wd = 1 - lr * cfg.optim.weight_decay
                 new_p = jax.tree.map(
                     lambda p, d: (p.astype(jnp.float32) * wd
@@ -499,6 +593,8 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                     state["params"], delta_tree)
                 new_state = {"params": new_p, "opt": new_opt,
                              "step": state["step"] + 1}
+            if new_arena is not None:
+                new_state["arena"] = new_arena
             metrics = {"loss": ctx.pmean_data(loss), "grad_norm": gnorm,
                        "lr": lr}
             return new_state, metrics
@@ -508,7 +604,12 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
         gdt = jnp.dtype(cfg.gather_dtype)
         # reduction rides the autodiff transpose of the per-layer gather, so
         # streaming in readiness order is intrinsic; the schedule records it
-        comm_sched = _fsdp_schedule(plan, cfg.accum.microbatches)
+        comm_sched = _fsdp_schedule(plan, cfg.microbatches)
+        fsdp_arena = (CommArena(plan.arena_layout,
+                                impl="pallas"
+                                if plan.comm.cfg.local_op == "pallas"
+                                else "jnp")
+                      if cfg.use_arena else None)
 
         def step_fn(state, batch):
             def gfn(groups, mb):
@@ -521,8 +622,16 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
             def grad_fn(groups, mb):
                 return jax.value_and_grad(gfn)(groups, mb)
 
-            loss, grads = plan.comm.reduce_scheduled(
-                grad_fn, state["groups"], batch, comm_sched, op="none")
+            new_arena = None
+            if fsdp_arena is not None:
+                # the arena is the microbatch accumulation buffer (grads
+                # arrive pre-sharded via the gather transpose)
+                loss, (grads, new_arena) = plan.comm.reduce_scheduled(
+                    grad_fn, state["groups"], batch, comm_sched, op="none",
+                    arena=fsdp_arena, arena_buf=state["arena"])
+            else:
+                loss, grads = plan.comm.reduce_scheduled(
+                    grad_fn, state["groups"], batch, comm_sched, op="none")
             # grads are flat shards already (AG-transpose == RS-sum over the
             # data axes); normalise the sum into a mean.
             inv = 1.0 / max(plan.dp_world, 1)
@@ -552,6 +661,8 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
             new_state = {"groups": new_groups,
                          "opt": {"mu": new_mu, "nu": new_nu},
                          "step": state["step"] + 1}
+            if new_arena is not None:
+                new_state["arena"] = new_arena
             metrics = {"loss": ctx.pmean_data(loss), "grad_norm": gnorm,
                        "lr": lr}
             return new_state, metrics

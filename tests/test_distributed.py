@@ -114,7 +114,6 @@ from repro.configs import reduced_config
 from repro.models import build_model
 from repro.runtime.train_step import TrainStepConfig, build_train_step, init_train_state
 from repro.core.reducer import ReduceConfig
-from repro.core.overlap import AccumConfig
 from repro.optim import adamw_tree_update, init_opt_state, OptimConfig, make_schedule
 from repro.optim.adamw import clip_factor
 
@@ -148,7 +147,7 @@ for i in range(3):
 for mode, tol in [("replicated", 5e-5), ("zero1", 5e-5), ("fsdp", 5e-4)]:
     tcfg = TrainStepConfig(dp_mode=mode,
                            reduce=ReduceConfig(policy="fused_ring_hierarchical", chunks=2),
-                           accum=AccumConfig(microbatches=2))
+                           microbatches=2)
     with mesh:
         state, _ = init_train_state(m, mesh, tcfg, key=jax.random.key(7))
         step = build_train_step(m, mesh, tcfg, bspecs)

@@ -10,7 +10,6 @@ from conftest import run_distributed
 
 from repro.comm import (CommConfig, Communicator, SCHEDULE_POLICIES,
                         build_schedule)
-from repro.core.overlap import AccumConfig, canned_schedule
 
 
 # ---------------------------------------------------------------------------
@@ -80,25 +79,15 @@ def test_describe_round_trips_and_elides():
 def test_unknown_policy_raises():
     with pytest.raises(ValueError, match="unknown schedule policy"):
         build_schedule("bogus", SIZES)
-    with pytest.raises(ValueError, match="unknown accumulation policy"):
-        canned_schedule(AccumConfig(policy="bogus"), SIZES)
 
 
-def test_canned_schedule_maps_legacy_policies():
-    for policy in ("accumulate_then_reduce", "stream"):
-        s = canned_schedule(AccumConfig(microbatches=3, policy=policy),
-                            SIZES, channels=2)
-        assert s.policy == policy and s.microbatches == 3
-
-
-def test_train_step_config_schedule_overrides_accum_policy():
+def test_train_step_config_schedule_policy():
     from repro.runtime.train_step import TrainStepConfig
 
-    cfg = TrainStepConfig(accum=AccumConfig(policy="stream"))
-    assert cfg.schedule_policy == "stream"
+    assert TrainStepConfig().schedule_policy == "accumulate_then_reduce"
+    assert TrainStepConfig(schedule="stream").schedule_policy == "stream"
     assert TrainStepConfig(schedule="scheduled",
-                           accum=AccumConfig(policy="stream")
-                           ).schedule_policy == "scheduled"
+                           microbatches=3).schedule_policy == "scheduled"
     with pytest.raises(ValueError, match="unknown schedule policy"):
         TrainStepConfig(schedule="bogus").schedule_policy
 
@@ -173,7 +162,6 @@ import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.configs import reduced_config
-from repro.core.overlap import AccumConfig
 from repro.core.reducer import ReduceConfig
 from repro.models import build_model
 from repro.runtime.train_step import (TrainStepConfig, build_train_step,
@@ -192,7 +180,7 @@ def run(mode, policy):
     tcfg = TrainStepConfig(
         dp_mode=mode,
         reduce=ReduceConfig(policy="fused_ring_hierarchical", chunks=2),
-        accum=AccumConfig(microbatches=2, policy=policy))
+        microbatches=2, schedule=policy)
     with mesh:
         state, _ = init_train_state(model, mesh, tcfg, key=jax.random.key(7))
         step = build_train_step(model, mesh, tcfg, bspecs)
@@ -227,7 +215,6 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.comm import CommConfig
 from repro.configs import reduced_config
-from repro.core.overlap import AccumConfig
 from repro.models import build_model
 from repro.runtime.train_step import (TrainStepConfig, build_step_schedule,
                                       build_train_step, init_train_state)
@@ -245,7 +232,7 @@ for policy in ("stream", "scheduled"):
     tcfg = TrainStepConfig(
         dp_mode="replicated",
         comm=CommConfig(transport="psum", bucket_bytes=1 << 16, channels=0),
-        accum=AccumConfig(microbatches=2, policy=policy))
+        microbatches=2, schedule=policy)
     with mesh:
         sched = build_step_schedule(model, mesh, tcfg)
         state_abs, _ = init_train_state(model, mesh, tcfg, abstract=True)

@@ -7,7 +7,6 @@ import pytest
 
 from repro import compat
 from repro.configs import reduced_config
-from repro.core.overlap import AccumConfig
 from repro.core.reducer import ReduceConfig
 from repro.data import DataConfig, SyntheticTokens
 from repro.models import build_model
@@ -34,7 +33,7 @@ def _setup(tmp_path, steps=24, ckpt_every=8):
         dp_mode="replicated",
         reduce=ReduceConfig(policy="fused_ring_hierarchical"),
         optim=OptimConfig(base_lr=3e-3, warmup=5, total_steps=steps),
-        accum=AccumConfig(microbatches=1))
+        microbatches=1)
     tcfg = TrainerConfig(steps=steps, ckpt_every=ckpt_every,
                          ckpt_dir=str(tmp_path / "ckpt"), log_every=100)
     return model, shape, data, scfg, tcfg
