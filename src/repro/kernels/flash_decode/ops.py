@@ -1,0 +1,50 @@
+"""Jit'd wrappers for split-KV decode attention with oracle fallback.
+
+``flash_decode_stats`` is the building block the paged engine consumes:
+partial softmax statistics over one KV shard, mergeable across shards or
+ranks with :func:`ref.combine`.  ``flash_decode`` closes the loop locally
+(single shard → normalised output).  Shapes that do not tile by the key
+block fall back to the one-shot oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.flash_decode import ref
+from repro.kernels.flash_decode.flash_decode import flash_decode_stats_fwd
+
+
+def _expand_gqa(q, k, v):
+    group = q.shape[1] // k.shape[1]
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    return k, v
+
+
+def flash_decode_stats(q: jax.Array, k: jax.Array, v: jax.Array,
+                       valid: jax.Array, *, block_k: int = 128,
+                       interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Partial stats (acc, m, l) for q (B,Hq,1,D) over kv (B,Hkv,L,D)."""
+    hq, d = q.shape[1], q.shape[3]
+    hkv, sk = k.shape[1], k.shape[2]
+    bk = min(block_k, sk)
+    if sk % bk or d % 8 or hq % hkv:
+        ke, ve = _expand_gqa(q, k, v)
+        return ref.decode_stats(q, ke, ve, valid != 0)
+    interpret = default_interpret() if interpret is None else interpret
+    return flash_decode_stats_fwd(q, k, v, valid, block_k=bk,
+                                  interpret=interpret)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 valid: jax.Array, *, block_k: int = 128,
+                 interpret: bool | None = None) -> jax.Array:
+    """Single-shard decode attention output (B, Hq, 1, D)."""
+    stats = flash_decode_stats(q, k, v, valid, block_k=block_k,
+                               interpret=interpret)
+    return ref.combine([stats]).astype(q.dtype)

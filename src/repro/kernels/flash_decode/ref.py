@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for split-KV decode attention.
+
+Decode attention factors into **partial softmax statistics** over any
+partition of the key positions::
+
+    stats(q, K, V)     = (acc, m, l)       # unnormalised numerator, running
+                                           # max, denominator
+    out                = combine(parts) = Σ acc_i·e^{m_i−m} / Σ l_i·e^{m_i−m}
+
+so splitting KV over pages, devices or both and merging with a
+log-sum-exp combine is *exactly* the full softmax — the invariance the
+flash-decode kernel, the paged engine's cross-rank reduction and the
+dry-run's collective-count prediction all rest on.
+
+Two oracles: :func:`decode_stats` is the one-shot reference;
+:func:`decode_stats_blockwise` mirrors the Pallas kernel's online-softmax
+loop op-for-op (same primitives, same accumulation order), which pins the
+kernel's *algorithm*: agreement is tied to the shared reduction order, so
+any drift in tiling or update maths shows up far above the ~1-ulp noise
+floor XLA fusion is allowed to introduce.  The kernel's *numerics* are
+pinned separately as run-to-run **bitwise** determinism (same input → same
+bits), which is what split-KV serving actually relies on.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_stats(q: jax.Array, k: jax.Array, v: jax.Array,
+                 valid: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Partial attention statistics over one KV shard.
+
+    q: (B, H, 1, D); k/v: (B, H, L, D); valid: (B, L) bool.
+    Returns fp32 ``(acc (B,H,1,D), m (B,H,1,1), l (B,H,1,1))``.
+    """
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk",
+                   q.astype(jnp.float32) / math.sqrt(d),
+                   k.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    acc = jnp.einsum("bhqk,bhkd->bhqd", e, v.astype(jnp.float32))
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    return acc, m, l
+
+
+def decode_stats_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
+                           valid: jax.Array, *, block_k: int = 128
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Online-softmax mirror of the Pallas kernel.
+
+    Same tiling (``block_k``), same primitive ops in the same order as
+    ``flash_decode._decode_kernel``; L must tile by ``block_k``.  Matches
+    the kernel to reordering-free float error (~1 ulp per op — XLA fuses
+    the two call sites differently, so exact bitwise equality across the
+    two execution paths is not defined; run-to-run determinism of each
+    path individually is).
+    """
+    b, h, _, d = q.shape
+    sk = k.shape[2]
+    if sk % block_k:
+        raise ValueError(f"L={sk} must tile by block_k={block_k}")
+    scale = 1.0 / (d ** 0.5)
+    m = jnp.full((b, h, 1, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, h, 1, 1), jnp.float32)
+    acc = jnp.zeros((b, h, 1, d), jnp.float32)
+    qf = q.astype(jnp.float32)
+    for j in range(sk // block_k):
+        k0 = j * block_k
+        kj = k[:, :, k0:k0 + block_k].astype(jnp.float32)
+        vj = v[:, :, k0:k0 + block_k].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qf, kj, (((3,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32) * scale      # (B,H,1,bk)
+        ok = valid[:, None, None, k0:k0 + block_k] != 0
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jax.lax.dot_general(
+            p, vj, (((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)
+        m = m_new
+    return acc, m, l
+
+
+def combine(parts) -> jax.Array:
+    """Merge split-KV partial stats into the normalised output.
+
+    ``parts``: sequence of ``(acc, m, l)``.  Algebraically identical to the
+    full softmax over the concatenated key positions.
+    """
+    m = parts[0][1]
+    for _, mi, _ in parts[1:]:
+        m = jnp.maximum(m, mi)
+    num = jnp.zeros_like(parts[0][0])
+    den = jnp.zeros_like(parts[0][2])
+    for acc, mi, li in parts:
+        w = jnp.exp(mi - m)
+        num = num + acc * w
+        den = den + li * w
+    return num / jnp.maximum(den, 1e-30)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid: jax.Array, *, splits: int = 1) -> jax.Array:
+    """Full decode attention via ``splits`` KV shards + LSE combine —
+    the end-to-end oracle the paged engine is checked against."""
+    sk = k.shape[2]
+    if sk % splits:
+        raise ValueError(f"L={sk} must tile by splits={splits}")
+    c = sk // splits
+    parts = [decode_stats(q, k[:, :, i * c:(i + 1) * c],
+                          v[:, :, i * c:(i + 1) * c],
+                          valid[:, i * c:(i + 1) * c])
+             for i in range(splits)]
+    return combine(parts).astype(q.dtype)

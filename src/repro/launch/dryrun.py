@@ -484,6 +484,158 @@ def run_mem_suite(args, cache: dict) -> None:
                     json.dump(cache, f, indent=1)
 
 
+SERVE_DEFAULT_ARCHS = ["llama3.2-1b", "qwen2-7b"]
+
+
+def run_serve_cell(arch: str, page_tokens: int, model_parallel: int, *,
+                   page_bytes: int = 4096, max_seqs: int = 4,
+                   max_seq_len: int = 64) -> dict:
+    """One ``--suite serve`` cell: lower + compile one paged decode step
+    (``repro.serve``) on a ``(1, R)`` mesh and hold the serving prediction
+    layer to the optimized HLO with zero tolerance:
+
+    * **bytes/pages** — the donated page arena is the step's first argument
+      → ENTRY parameter 0 of the compiled module; its lowered size must be
+      exactly ``KVArenaPlan.total_elems`` elements of the cache dtype, i.e.
+      predicted KV bytes == lowered buffer bytes and predicted page count
+      == lowered bytes / page_bytes;
+    * **counts** — one decode token must lower to exactly
+      ``predicted_collectives_per_token(plan)`` all-reduce ops (the per-layer
+      pmax + fused LSE stats reduce; zero when R == 1);
+    * **wire bytes** — parsed all-reduce bytes must equal
+      ``predicted_wire_bytes_per_token`` exactly (ring ``2(R-1)/R`` hops
+      over the fp32 stats, nothing else crosses the wire per token).
+
+    The roofline prices the per-token exposed comm with the α·messages
+    latency term — decode is the α-bound regime, same as the paper's
+    strong-scaled CG.
+    """
+    from repro import compat
+    from repro.configs import reduced_config
+    from repro.serve.engine import (build_paged_decode_step,
+                                    predicted_collectives_per_token,
+                                    predicted_wire_bytes_per_token)
+    from repro.serve.kv import plan_kv_arena
+
+    r = int(model_parallel)
+    mesh = compat.make_mesh((1, r), ("data", "model"),
+                            devices=jax.devices()[:r])
+    model = build_model(reduced_config(arch))
+    plan = plan_kv_arena(model.cfg, mesh, page_tokens=page_tokens,
+                         page_bytes=page_bytes, max_seqs=max_seqs,
+                         max_seq_len=max_seq_len)
+    b = plan.max_seqs
+    with mesh:
+        step, _, _ = build_paged_decode_step(model, mesh, plan,
+                                             attn_impl="ref")
+        pages_abs = jax.ShapeDtypeStruct((plan.total_elems,),
+                                         plan.layout.dtype)
+        table_abs = jax.ShapeDtypeStruct(
+            (b, plan.max_blocks, plan.n_layers), jnp.int32)
+        vec = jax.ShapeDtypeStruct((b,), jnp.int32)
+        valid_abs = jax.ShapeDtypeStruct((b,), jnp.bool_)
+        t0 = time.time()
+        compiled = step.lower(pages_abs, model.abstract_params(), table_abs,
+                              vec, vec, valid_abs).compile()
+        compile_s = time.time() - t0
+
+    txt = compiled.as_text()
+    stats = collective_wire_bytes(txt)
+
+    # --- the zero-tolerance prediction checks -----------------------------
+    hlo_dtype = {"bfloat16": "bf16", "float32": "f32",
+                 "float16": "f16"}[jnp.dtype(plan.layout.dtype).name]
+    lowered_elems = _entry_param_elems(txt, 0, hlo_dtype)
+    if lowered_elems != plan.total_elems:
+        raise AssertionError(
+            f"lowered page arena is {hlo_dtype}[{lowered_elems}], predicted "
+            f"{hlo_dtype}[{plan.total_elems}] ({plan.total_bytes} B, "
+            f"{plan.n_arena_pages} pages)")
+    n_ar = stats.op_counts.get("all-reduce", 0)
+    pred_count = predicted_collectives_per_token(plan)
+    if n_ar != pred_count:
+        raise AssertionError(
+            f"decode step lowered to {n_ar} all-reduce ops per token, "
+            f"predicted {pred_count} (2 per layer at R={r})")
+    measured = stats.op_bytes.get("all-reduce", 0.0)
+    predicted = predicted_wire_bytes_per_token(plan, model.cfg, b)
+    if measured != predicted:
+        raise AssertionError(
+            f"per-token all-reduce wire bytes: predicted {predicted}, "
+            f"HLO {measured}")
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    roof = Roofline(
+        flops_per_device=float(ca.get("flops", 0.0)),
+        hbm_bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        wire_bytes_per_device=predicted,
+        messages_per_device=float(stats.messages),
+        overlap_fraction=0.0,       # decode comm is on the critical path
+    )
+    return {
+        "arch": arch, "suite": "serve",
+        "page_tokens": page_tokens,
+        "page_bytes": int(page_bytes),
+        "mesh": f"1x{r}",
+        "devices": r,
+        "batch_slots": b,
+        "max_seq_len": max_seq_len,
+        "compile_s": compile_s,
+        "predicted_kv_bytes": plan.total_bytes,
+        "predicted_kv_pages": plan.n_arena_pages,
+        "lowered_arena_elems": lowered_elems,
+        "kv_bytes_match": lowered_elems == plan.total_elems,
+        "padding_fraction": plan.padding_fraction,
+        "predicted_collectives_per_token": pred_count,
+        "hlo_allreduce_per_token": n_ar,
+        "predicted_wire_bytes_per_token": predicted,
+        "hlo_wire_bytes_per_token": measured,
+        "hlo_messages": stats.messages,
+        "roofline": roof.as_dict(r),
+        "kv_plan": plan.describe(),
+    }
+
+
+def run_serve_suite(args, cache: dict) -> None:
+    """The ``--suite serve`` grid: arch × page_tokens × model-parallel,
+    each cell asserting predicted KV-arena bytes/pages and per-decode-token
+    collective counts against the lowered HLO with zero tolerance."""
+    archs = (SERVE_DEFAULT_ARCHS if args.arch == "all"
+             else args.arch.split(","))
+    pts = [int(s) for s in str(args.page_tokens).split(",")]
+    rs = [int(s) for s in str(args.serve_mp).split(",")]
+    for arch in archs:
+        for pt in pts:
+            for r in rs:
+                grid = {"page_tokens": pt, "model_parallel": r}
+                key = cell_key(args.tag, arch, "serve", f"r{r}", grid)
+                if key in cache and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[lower+compile] {key} ...", flush=True)
+                t0 = time.time()
+                try:
+                    rec = run_serve_cell(arch, pt, r)
+                    rec["tag"] = args.tag
+                    cache[key] = rec
+                    print(f"  ok in {time.time()-t0:.1f}s: "
+                          f"kv={rec['predicted_kv_bytes']}B "
+                          f"pages={rec['predicted_kv_pages']} "
+                          f"pad={rec['padding_fraction']:.2%} "
+                          f"collectives/token={rec['hlo_allreduce_per_token']}"
+                          f" wire/token={rec['hlo_wire_bytes_per_token']:.0f}B",
+                          flush=True)
+                except Exception as e:
+                    cache[key] = {"error": str(e), "tag": args.tag,
+                                  "arch": arch, "shape": "serve"}
+                    print(f"  FAILED: {e}")
+                    traceback.print_exc()
+                with open(args.out, "w") as f:
+                    json.dump(cache, f, indent=1)
+
+
 STENCIL_MESH = {"single": ((4, 8, 8), 256), "multi": ((8, 8, 8), 512)}
 
 
@@ -675,7 +827,7 @@ def main() -> None:
                          "(stream/scheduled overlap comm with backward "
                          "compute; reflected in t_exposed_collective)")
     ap.add_argument("--suite", default="train",
-                    choices=["train", "stencil", "mem"],
+                    choices=["train", "stencil", "mem", "serve"],
                     help="train: the arch x shape grid below; stencil: the "
                          "QCD workload — lattice-volume x halo-schedule "
                          "cells on a 3-D Cartesian mesh, checking HaloPlan "
@@ -683,6 +835,10 @@ def main() -> None:
                          "mem: the repro.mem arena grid — page_bytes x "
                          "bucket_mb x arch cells asserting predicted arena "
                          "bytes/pages/collective counts against lowered "
+                         "HLO with zero tolerance; serve: the repro.serve "
+                         "grid — arch x page_tokens x model-parallel paged "
+                         "decode steps asserting predicted KV bytes/pages "
+                         "and per-token collective counts against lowered "
                          "HLO with zero tolerance")
     ap.add_argument("--page-bytes", default="4096,2097152",
                     help="mem suite: comma-separated arena page sizes "
@@ -691,6 +847,13 @@ def main() -> None:
     ap.add_argument("--bucket-mb", default="1",
                     help="mem suite: comma-separated bucketer targets in "
                          "MiB")
+    ap.add_argument("--page-tokens", default="8,16",
+                    help="serve suite: comma-separated KV page sizes in "
+                         "token positions")
+    ap.add_argument("--serve-mp", default="1,2",
+                    help="serve suite: comma-separated model-axis sizes R "
+                         "to lower the paged decode step on (host devices "
+                         "are forced, so any R works without hardware)")
     ap.add_argument("--lattice", default="8",
                     help="stencil suite: comma-separated local lattice "
                          "extents (local volume = L^3 x 12 components)")
@@ -725,11 +888,13 @@ def main() -> None:
         with open(args.out) as f:
             cache = json.load(f)
 
-    if args.suite in ("stencil", "mem"):
+    if args.suite in ("stencil", "mem", "serve"):
         if args.suite == "stencil":
             run_stencil_suite(args, meshes, cache)
-        else:
+        elif args.suite == "mem":
             run_mem_suite(args, cache)
+        else:
+            run_serve_suite(args, cache)
         n_ok = sum(1 for v in cache.values() if "error" not in v)
         n_err = sum(1 for v in cache.values() if "error" in v)
         print(f"done: {n_ok} ok, {n_err} failed -> {args.out}")

@@ -23,6 +23,19 @@ from repro.runtime.train_step import (FsdpPlan, TrainStepConfig, _flat_spec,
 from repro.sharding import rules as shard_rules
 
 
+def _require_decoder_only(cfg, what: str) -> None:
+    """Gathered serving streams params through ``transformer.forward`` /
+    ``decode_step``, which only model decoder-only transformer stacks.  Any
+    other family (encdec cross-attention, ssm / hybrid recurrent state,
+    audio frontends) would silently produce garbage, so refuse at build
+    time — not at trace time, and not just for encdec."""
+    if cfg.family not in ("dense", "moe") or cfg.frontend is not None:
+        raise NotImplementedError(
+            f"gathered {what} is decoder-only: family={cfg.family!r} "
+            f"frontend={cfg.frontend!r} is not supported (use "
+            f"weight_mode='resident')")
+
+
 def _batch_axis(mesh: Mesh, global_batch: int):
     bspec = shard_rules.batch_spec(global_batch, mesh)
     return tuple(bspec)[0] if len(bspec) else None
@@ -44,6 +57,7 @@ def build_prefill(model: Model, mesh: Mesh, shape_cfg, *,
     bspecs = _batch_specs(specs_abs, batch_axes)
 
     if weight_mode == "gathered":
+        _require_decoder_only(model.cfg, "prefill")
         plan = FsdpPlan(model, mesh, TrainStepConfig(dp_mode="fsdp"))
         pspecs = {"groups": {name: [_flat_spec(mesh)] * plan.plans[name].n_buckets
                              for name in plan.groups}}
@@ -51,8 +65,6 @@ def build_prefill(model: Model, mesh: Mesh, shape_cfg, *,
         def fn(params, batch):
             tree, resolver = plan.params_and_resolver(params["groups"],
                                                       jnp.bfloat16)
-            if model.cfg.family in ("encdec",) or model.cfg.frontend == "audio_stub":
-                raise NotImplementedError("gathered serving is decoder-only")
             from repro.models import transformer
 
             logits, _ = transformer.forward(tree, batch["tokens"], model.cfg,
@@ -86,6 +98,7 @@ def build_decode_step(model: Model, mesh: Mesh, shape_cfg, *,
     vocab_ax = "model" if "model" in mesh.axis_names else None
 
     if weight_mode == "gathered":
+        _require_decoder_only(model.cfg, "decode")
         plan = FsdpPlan(model, mesh, TrainStepConfig(dp_mode="fsdp"))
         pspecs = {"groups": {name: [_flat_spec(mesh)] * plan.plans[name].n_buckets
                              for name in plan.groups}}

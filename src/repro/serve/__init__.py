@@ -1,0 +1,21 @@
+"""repro.serve: continuous-batching inference over a paged KV-cache arena.
+
+The serving-side incarnation of the paper's huge-page pillar: decode is the
+α-dominated regime (per-token collectives with tiny payloads), so the KV
+cache lives in one persistent, donated, page-quantized arena
+(:mod:`repro.serve.kv` generalises :class:`repro.mem.layout.ArenaLayout`
+into a page table), requests are admitted/evicted in-flight between decode
+steps without recompilation (:mod:`repro.serve.scheduler`), and attention
+over the paged cache runs as a split-KV flash-decode whose partial softmax
+statistics combine across the model axis through the channelized
+:class:`repro.comm.Communicator` (:mod:`repro.serve.engine` +
+:mod:`repro.kernels.flash_decode`).
+"""
+
+from repro.serve.engine import PagedDecodeEngine, build_paged_decode_step
+from repro.serve.kv import KVArenaPlan, KVPageAllocator, plan_kv_arena
+from repro.serve.scheduler import Request, ServeScheduler, mixed_trace
+
+__all__ = ["KVArenaPlan", "KVPageAllocator", "plan_kv_arena",
+           "PagedDecodeEngine", "build_paged_decode_step",
+           "Request", "ServeScheduler", "mixed_trace"]

@@ -1,0 +1,324 @@
+"""Paged decode engine: flash-decode attention over the KV page arena.
+
+One jitted step decodes one token for every active slot against the paged
+KV cache.  The design commitments, in paper terms:
+
+* **One donated buffer.**  The whole KV cache is the flat page arena from
+  :func:`repro.serve.kv.plan_kv_arena`; it is the step's *first* argument
+  and is donated, so XLA aliases input to output and the buffer is
+  allocated exactly once for the life of the server — the serving analogue
+  of the gradient :class:`~repro.mem.arena.CommArena`.
+* **Page-parallel decode on the model axis.**  Weights replicate across the
+  model axis (decode is α-bound, not FLOP-bound; head-sharding would force
+  a collective per projection) and the axis is spent where the memory is:
+  each rank gathers and scores a static ``blocks_per_rank`` chunk of the
+  page-table columns with the split-KV flash-decode kernel, then the
+  partial softmax statistics merge across ranks.
+* **Two collectives per layer per token, fused.**  The cross-rank merge is
+  one ``pmax`` of the running max plus ONE fused
+  :meth:`Communicator.all_reduce` carrying the rescaled numerator and
+  denominator in a single flat buffer — against the naive three
+  (max/num/den) of the sequence-sharded path in ``models.attention``.
+  With ``model == 1`` both are statically skipped: a single-rank decode
+  step lowers to **zero** collectives.  ``dryrun --suite serve`` holds the
+  resulting count (``2 · n_layers`` or ``0``) to the optimized HLO exactly.
+
+Admission, eviction and page recycling are host-side (numpy) and change no
+traced shape, so the step compiles once per ``(plan, arch)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.comm import CommConfig, Communicator
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_decode import ops as fd_ops
+from repro.kernels.flash_decode import ref as fd_ref
+from repro.models import moe as moe_mod
+from repro.models.attention import _merge_heads, _split_heads, padded_heads
+from repro.models.common import (apply_rope, dense, embed, glu_mlp, rmsnorm,
+                                 unembed)
+from repro.runtime.train_step import make_ctx
+from repro.serve.kv import KVArenaPlan, KVPageAllocator, PageTable
+from repro.sharding import rules as shard_rules
+
+
+# ---------------------------------------------------------------------------
+# prediction layer (read by launch/dryrun --suite serve and bench_serve)
+# ---------------------------------------------------------------------------
+
+
+def predicted_collectives_per_token(plan: KVArenaPlan) -> int:
+    """HLO all-reduce ops one decode step lowers to: pmax + one fused LSE
+    stats reduce per layer when the model axis is real, else zero."""
+    return 2 * plan.n_layers if plan.model_parallel > 1 else 0
+
+
+def predicted_wire_bytes_per_token(plan: KVArenaPlan, cfg: ModelConfig,
+                                   batch: int) -> float:
+    """Per-device all-reduce wire bytes of one decode step (ring lower
+    bound, ``2(R-1)/R`` hops): the fp32 running max (B·Hq) plus the fused
+    numerator+denominator buffer (B·Hq·(D+1)) per layer."""
+    r = plan.model_parallel
+    if r <= 1:
+        return 0.0
+    hq = padded_heads(cfg.attn.num_heads)
+    hops = 2.0 * (r - 1) / r
+    per_layer = (batch * hq + batch * hq * (plan.head_dim + 1)) * 4
+    return plan.n_layers * per_layer * hops
+
+
+# ---------------------------------------------------------------------------
+# paged read/write (device side, fixed shapes)
+# ---------------------------------------------------------------------------
+
+
+def _write_token_kv(pages, plan: KVArenaPlan, layer: int, table, slot_len,
+                    slot_valid, k1, v1):
+    """Scatter this step's K/V (B, Hkv, 1, D) into each slot's current page.
+
+    Invalid slots (or unmapped blocks) get an out-of-bounds index, which the
+    scatter drops — no branch, no shape change."""
+    pt, d, hkv = plan.page_tokens, plan.head_dim, plan.num_kv_heads
+    block = slot_len // pt
+    within = slot_len % pt
+    page = jnp.take_along_axis(table[:, :, layer], block[:, None],
+                               axis=1)[:, 0]                       # (B,)
+    ok = slot_valid & (page >= 0)
+    base = page * plan.page_stride + within * d                    # (B,)
+    idx = (base[:, None, None]
+           + (jnp.arange(hkv) * (pt * d))[None, :, None]
+           + jnp.arange(d)[None, None, :])                         # (B,Hkv,D)
+    idx = jnp.where(ok[:, None, None], idx, plan.total_elems)      # OOB drop
+    pages = pages.at[idx].set(k1[:, :, 0, :].astype(pages.dtype))
+    pages = pages.at[idx + plan.v_offset].set(v1[:, :, 0, :].astype(pages.dtype))
+    return pages
+
+
+def _gather_local_kv(pages, plan: KVArenaPlan, layer: int, table, rank):
+    """This rank's chunk of the paged cache as dense (B, Hkv, L_local, D)
+    K/V, plus its page-table slice (for validity).  ``rank`` is traced;
+    the chunk extent ``blocks_per_rank`` is static."""
+    bpr, pt, d = plan.blocks_per_rank, plan.page_tokens, plan.head_dim
+    hkv = plan.num_kv_heads
+    tab = lax.dynamic_slice_in_dim(table[:, :, layer], rank * bpr, bpr,
+                                   axis=1)                         # (B, bpr)
+    base = jnp.maximum(tab, 0) * plan.page_stride
+    off = ((jnp.arange(hkv) * (pt * d))[:, None, None]
+           + (jnp.arange(pt) * d)[None, :, None]
+           + jnp.arange(d)[None, None, :])                     # (Hkv, Pt, D)
+    idx = base[:, :, None, None, None] + off[None, None]   # (B,bpr,Hkv,Pt,D)
+    b = idx.shape[0]
+    k = jnp.take(pages, idx).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, hkv, bpr * pt, d)
+    v = jnp.take(pages, idx + plan.v_offset).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, hkv, bpr * pt, d)
+    return k, v, tab
+
+
+def _local_valid(plan: KVArenaPlan, tab, slot_len, slot_valid, rank):
+    """(B, L_local) mask: position exists (≤ current pos, incl. the token
+    just written), its block is mapped, and the slot is live."""
+    bpr, pt = plan.blocks_per_rank, plan.page_tokens
+    blk = rank * bpr + jnp.arange(bpr)
+    gpos = blk[:, None] * pt + jnp.arange(pt)[None, :]         # (bpr, Pt)
+    ok = gpos[None] <= slot_len[:, None, None]
+    ok = ok & (tab >= 0)[:, :, None] & slot_valid[:, None, None]
+    return ok.reshape(ok.shape[0], bpr * pt)
+
+
+# ---------------------------------------------------------------------------
+# the step
+# ---------------------------------------------------------------------------
+
+
+def build_paged_decode_step(model, mesh: Mesh, plan: KVArenaPlan, *,
+                            attn_impl: str = "kernel",
+                            interpret: bool | None = None,
+                            donate: bool = True):
+    """Returns ``(step, param_specs, state_specs)`` with
+    ``step(pages, params, table, token, slot_len, slot_valid) ->
+    (logits (B, vocab), pages)``; ``pages`` is donated (argument 0).
+
+    ``params`` must be the full (un-sharded) tree — the engine replicates
+    weights over the model axis by design (see module docstring).
+    ``attn_impl``: "kernel" scores pages with the Pallas flash-decode
+    kernel, "ref" with the jnp oracle (same math and identical collective
+    footprint; the dry-run uses "ref" to keep compile times sane).
+    """
+    if attn_impl not in ("kernel", "ref"):
+        raise ValueError(f"attn_impl must be kernel|ref, got {attn_impl!r}")
+    cfg = model.cfg
+    ctx = make_ctx(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    r_mesh = sizes.get("model", 1)
+    if r_mesh != plan.model_parallel:
+        raise ValueError(
+            f"plan was laid out for model_parallel={plan.model_parallel} "
+            f"but the mesh model axis is {r_mesh}; re-plan with this mesh")
+    r = plan.model_parallel
+    comm = (Communicator(mesh, CommConfig(transport="psum",
+                                          data_axes=("model",), channels=1))
+            if r > 1 else None)
+    cdt = jnp.dtype(cfg.dtype)
+    hkv, hd = cfg.attn.num_kv_heads, cfg.attn.head_dim
+    true_group = max(cfg.attn.num_heads // hkv, 1)
+
+    def attend(q, pages, layer, table, slot_len, slot_valid):
+        k, v, tab = _gather_local_kv(pages, plan, layer, table,
+                                     ctx.model_index())
+        # true-group GQA map (padded q heads clip to the last kv head) —
+        # expand kv per q head so the kernel runs group-free; the uniform
+        # h//group map inside the kernel would mis-pair padded head counts.
+        kv_idx = jnp.clip(jnp.arange(q.shape[1]) // true_group, 0, hkv - 1)
+        k = jnp.take(k, kv_idx, axis=1)
+        v = jnp.take(v, kv_idx, axis=1)
+        valid = _local_valid(plan, tab, slot_len, slot_valid,
+                             ctx.model_index())
+        if attn_impl == "kernel":
+            acc, m, l = fd_ops.flash_decode_stats(q, k, v, valid,
+                                                  interpret=interpret)
+        else:
+            acc, m, l = fd_ref.decode_stats(q, k, v, valid)
+        if r == 1:
+            return fd_ref.combine([(acc, m, l)]).astype(q.dtype)
+        m_g = ctx.pmax(m)
+        w = jnp.exp(m - m_g)
+        n_num = acc.size
+        buf = jnp.concatenate([(acc * w).reshape(-1), (l * w).reshape(-1)])
+        red = comm.all_reduce([buf])[0]
+        num = red[:n_num].reshape(acc.shape)
+        den = red[n_num:].reshape(l.shape)
+        return (num / jnp.maximum(den, 1e-30)).astype(q.dtype)
+
+    def fn(pages, params, table, token, slot_len, slot_valid):
+        x = embed(params["embed"], token[:, None], cdt, ctx, cfg.vocab_size)
+        posb = slot_len[:, None]                       # per-slot position
+        for i, bp in enumerate(params["blocks"]):
+            kind = cfg.layer_kind(i)
+            h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            pa = bp["attn"]
+            n_hq = pa["wq"]["w"].shape[1] // hd
+            q = _split_heads(dense(pa["wq"], h, cdt), n_hq)
+            k1 = _split_heads(dense(pa["wk"], h, cdt), hkv)
+            v1 = _split_heads(dense(pa["wv"], h, cdt), hkv)
+            q = apply_rope(q, posb, cfg.attn.rope_theta)
+            k1 = apply_rope(k1, posb, cfg.attn.rope_theta)
+            pages = _write_token_kv(pages, plan, i, table, slot_len,
+                                    slot_valid, k1, v1)
+            o = attend(q, pages, i, table, slot_len, slot_valid)
+            x = x + dense(pa["wo"], _merge_heads(o), cdt).astype(x.dtype)
+            if "moe" in bp or "mlp" in bp:
+                h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+                if kind["mlp"] == "moe":
+                    y, _ = moe_mod.moe_apply(bp["moe"], h2, cfg.moe, cfg.act,
+                                             ctx=ctx, compute_dtype=cdt)
+                else:
+                    y = glu_mlp(bp["mlp"], h2, cfg.act, cdt, ctx, cfg.d_ff)
+                x = x + y.astype(x.dtype)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x, cdt)
+        else:
+            logits = dense(params["lm_head"], x, cdt)
+        return logits[:, 0], pages
+
+    state_abs = {
+        "pages": jax.ShapeDtypeStruct((plan.total_elems,), plan.layout.dtype),
+        "page_table": jax.ShapeDtypeStruct(
+            (plan.max_seqs, plan.max_blocks, plan.n_layers), jnp.int32),
+        "slot_len": jax.ShapeDtypeStruct((plan.max_seqs,), jnp.int32),
+        "slot_valid": jax.ShapeDtypeStruct((plan.max_seqs,), jnp.bool_),
+    }
+    sspecs = shard_rules.decode_state_specs(state_abs, cfg, mesh,
+                                            plan.max_seqs)
+    pspecs = jax.tree.map(lambda _: P(), model.abstract_params())
+    sharded = compat.shard_map(
+        fn, mesh=mesh,
+        in_specs=(sspecs["pages"], pspecs, sspecs["page_table"], P(),
+                  sspecs["slot_len"], sspecs["slot_valid"]),
+        out_specs=(P(), sspecs["pages"]), check_vma=False)
+    step = jax.jit(sharded, donate_argnums=(0,) if donate else ())
+    return step, pspecs, sspecs
+
+
+# ---------------------------------------------------------------------------
+# host-side engine: slots, pages, one compile
+# ---------------------------------------------------------------------------
+
+
+class PagedDecodeEngine:
+    """Slot-indexed decode over the page arena.
+
+    Owns the donated arena buffer, the free-list allocator and the page
+    table; :meth:`decode` runs one step for every live slot.  All slot
+    management is host numpy with fixed traced shapes — admitting or
+    retiring between steps never recompiles."""
+
+    def __init__(self, model, mesh: Mesh, plan: KVArenaPlan, *,
+                 attn_impl: str = "kernel", interpret: bool | None = None,
+                 donate: bool = True):
+        self.model, self.mesh, self.plan = model, mesh, plan
+        self.step, self.param_specs, self.state_specs = \
+            build_paged_decode_step(model, mesh, plan, attn_impl=attn_impl,
+                                    interpret=interpret, donate=donate)
+        self.allocator = KVPageAllocator(plan.n_kv_pages)
+        self.table = PageTable(plan.max_seqs, plan.max_blocks, plan.n_layers)
+        self.slot_len = np.zeros((plan.max_seqs,), np.int32)
+        self.slot_valid = np.zeros((plan.max_seqs,), bool)
+        self.pages = plan.zeros()
+
+    # -- slot management (host side) ----------------------------------------
+
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.plan.max_seqs) if not self.slot_valid[i]]
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Worst-case pages a sequence of ``n_tokens`` needs (all layers)."""
+        import math as _m
+
+        return _m.ceil(n_tokens / self.plan.page_tokens) * self.plan.n_layers
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return (bool(self.free_slots())
+                and self.allocator.n_free >= self.pages_for(n_tokens))
+
+    def admit(self, slot: int) -> None:
+        if self.slot_valid[slot]:
+            raise ValueError(f"slot {slot} is already live")
+        self.slot_len[slot] = 0
+        self.slot_valid[slot] = True
+        self._ensure_block(slot)
+
+    def retire(self, slot: int) -> None:
+        self.allocator.free(self.table.clear_slot(slot))
+        self.slot_valid[slot] = False
+        self.slot_len[slot] = 0
+
+    def _ensure_block(self, slot: int) -> None:
+        blk = int(self.slot_len[slot]) // self.plan.page_tokens
+        if self.table.table[slot, blk, 0] < 0:
+            self.table.map_block(slot, blk,
+                                 self.allocator.alloc(self.plan.n_layers))
+
+    # -- the hot loop --------------------------------------------------------
+
+    def decode(self, params, token) -> jax.Array:
+        """One decode step: write ``token[slot]`` at each live slot's
+        position, attend over its pages, return logits (B, vocab).
+        Invalid slots' rows are garbage by contract."""
+        for s in np.nonzero(self.slot_valid)[0]:
+            self._ensure_block(int(s))
+        with self.mesh:
+            logits, self.pages = self.step(
+                self.pages, params, jnp.asarray(self.table.table),
+                jnp.asarray(token, jnp.int32).reshape(self.plan.max_seqs),
+                jnp.asarray(self.slot_len), jnp.asarray(self.slot_valid))
+        self.slot_len[self.slot_valid] += 1
+        return logits

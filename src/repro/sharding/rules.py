@@ -165,10 +165,21 @@ def decode_state_specs(state: Any, cfg: ModelConfig, mesh: Mesh,
     batch_axes = bspec[0] if len(bspec) else None
     tp = MODEL_AXIS if MODEL_AXIS in sizes else None
 
+    # Paged serving state (repro.serve): the KV arena and its bookkeeping
+    # are REPLICATED — page-parallelism is expressed inside the engine (each
+    # model rank scores its static slice of page-table columns), and the
+    # slot vectors index *sequences*, not the data batch.  The generic
+    # shape[0] == global_batch fallback below must not capture them: on a
+    # data > 1 mesh it would scatter slot_len / page_table over data ranks
+    # and every rank would see garbage lengths for the slots it didn't get.
+    _PAGED_STATE = ("pages", "page_table", "slot_len", "slot_valid")
+
     def visit(path, leaf):
         keys = tuple(_key_name(k) for k in path)
         name = keys[-1] if keys else ""
         shape = tuple(leaf.shape)
+        if name in _PAGED_STATE:
+            return P()
         if name in ("k", "v", "cross_k", "cross_v") and len(shape) == 4:
             # kv heads replicate across TP ranks (see rules above); long
             # caches are *sequence-sharded* over the model axis instead

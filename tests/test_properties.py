@@ -259,3 +259,87 @@ def test_ring_config_divisor_consistency(chunks, bidi, codec):
         assert d % cfg.codec_block == 0
     assert cfg.flat_divisor([4, 2]) % (8 * d * d) == 0 or True  # composes
     assert cfg.flat_divisor([4]) == 4 * d
+
+
+# ---------------------------------------------------------------------------
+# repro.serve: KV arena layout + page allocator (PR 6)
+# ---------------------------------------------------------------------------
+
+
+@given_or_grid(
+    "page_tokens,page_bytes,max_seqs,max_seq_len",
+    [(8, 4096, 4, 64), (1, 512, 1, 1), (16, 4096, 6, 100),
+     (32, 2 * 2**20, 2, 31), (5, 512, 3, 17)],
+    lambda: dict(page_tokens=st.integers(1, 32),
+                 page_bytes=st.sampled_from([512, 4096, 2 * 2**20]),
+                 max_seqs=st.integers(1, 6),
+                 max_seq_len=st.integers(1, 128)))
+def test_kv_arena_layout_invariants(page_tokens, page_bytes, max_seqs,
+                                    max_seq_len):
+    """Any (page_tokens, page_bytes, capacity) cell: page-quantized,
+    non-overlapping, and the waste accounting closes exactly."""
+    from repro.configs import reduced_config
+    from repro.serve import plan_kv_arena
+
+    cfg = reduced_config("llama3.2-1b")
+    plan = plan_kv_arena(cfg, page_tokens=page_tokens, page_bytes=page_bytes,
+                         max_seqs=max_seqs, max_seq_len=max_seq_len)
+    plan.layout.validate()
+    isz = jnp.dtype(plan.layout.dtype).itemsize
+    # page offsets start on huge-page boundaries and never overlap
+    assert (plan.page_stride * isz) % page_bytes == 0
+    assert plan.page_stride >= plan.payload_elems
+    for pid in (0, 1, plan.n_kv_pages - 1):
+        assert plan.page_offset(pid) == pid * plan.page_stride
+    # capacity: every (slot, block, layer) cell has a page
+    assert plan.n_kv_pages == plan.max_seqs * plan.max_blocks * plan.n_layers
+    assert plan.max_blocks * page_tokens >= max_seq_len
+    # V lives in the strict upper half of the payload: no K/V overlap
+    assert plan.v_offset == plan.payload_elems // 2
+    assert plan.k_offset + plan.v_offset <= plan.page_stride
+    # waste accounting closes: used + padding == total, fraction matches
+    used = plan.n_kv_pages * plan.payload_elems
+    assert plan.total_elems == plan.n_kv_pages * plan.page_stride
+    assert plan.layout.padding_elems == plan.total_elems - used
+    assert plan.padding_fraction == pytest.approx(
+        1.0 - used / plan.total_elems)
+    assert plan.total_bytes == plan.n_arena_pages * page_bytes
+
+
+@given_or_grid(
+    "n_pages,seed,rounds",
+    [(1, 0, 4), (7, 1, 20), (32, 2, 60), (5, 3, 12)],
+    lambda: dict(n_pages=st.integers(1, 48), seed=st.integers(0, 2**16),
+                 rounds=st.integers(1, 80)))
+def test_kv_allocator_conservation(n_pages, seed, rounds):
+    """Random alloc/free interleavings: pages are conserved (free +
+    allocated == total), never double-issued, and all recyclable."""
+    from repro.serve import KVPageAllocator
+
+    rng = np.random.RandomState(seed)
+    a = KVPageAllocator(n_pages)
+    held = []
+    for _ in range(rounds):
+        if rng.rand() < 0.6 and a.n_free:
+            n = int(rng.randint(1, a.n_free + 1))
+            got = a.alloc(n)
+            assert len(got) == n
+            assert not set(got) & set(held)          # never double-issued
+            assert all(0 <= p < n_pages for p in got)
+            held += got
+        elif held:
+            n = int(rng.randint(1, len(held) + 1))
+            rng.shuffle(held)
+            back, held = held[:n], held[n:]
+            a.free(back)
+        assert a.n_free + a.n_allocated == a.n_total == n_pages
+        assert a.n_allocated == len(held)
+    if held:
+        a.free(held)
+    assert a.n_free == n_pages
+    # over-allocation and double-free stay hard errors at every state
+    with pytest.raises(MemoryError):
+        a.alloc(n_pages + 1)
+    got = a.alloc(1)
+    with pytest.raises(ValueError):
+        a.free(got + got)
