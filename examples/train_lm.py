@@ -45,6 +45,9 @@ def main() -> None:
     ap.add_argument("--microbatches", type=int, default=2)
     ap.add_argument("--use-arena", action="store_true",
                     help="reduce out of the page-aligned repro.mem arena")
+    ap.add_argument("--wire-codec", default=None, choices=["int8"],
+                    help="quantize the gradient wire (int8 + per-block "
+                         "scales with error feedback)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args()
@@ -63,7 +66,7 @@ def main() -> None:
         optim=OptimConfig(base_lr=args.lr, warmup=20, schedule="wsd",
                           total_steps=args.steps),
         microbatches=args.microbatches, schedule="stream",
-        use_arena=args.use_arena)
+        use_arena=args.use_arena, wire_codec=args.wire_codec)
     trainer = Trainer(model, mesh, step_cfg, data, shape,
                       TrainerConfig(steps=args.steps, ckpt_every=50,
                                     ckpt_dir=args.ckpt_dir, log_every=20))

@@ -26,6 +26,7 @@ class.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Sequence, TYPE_CHECKING
 
@@ -48,8 +49,8 @@ from repro.core.ring import RingConfig
 from repro.core.topology import order_token, reduce_axes_of
 
 if TYPE_CHECKING:  # repro.mem is imported lazily (it imports comm.schedule)
-    from repro.mem.arena import CommArena
-    from repro.mem.layout import ArenaLayout
+    from repro.mem.arena import CommArena, QuantCommArena
+    from repro.mem.layout import ArenaLayout, QuantArenaLayout
 
 # NOTE: the legacy ``POLICY_TO_TRANSPORT`` table and
 # ``comm_config_from_policy`` live with the rest of the string-policy shim
@@ -69,6 +70,7 @@ class CommConfig:
     chunks: int = 2                # per-segment ppermute chains (ring only)
     bidirectional: bool = True
     wire_dtype: str | None = None
+    wire_codec: str | None = None  # "int8": quantized wire + arena codec
     codec_block: int = 512
     local_op: str = "jnp"          # "jnp" | "pallas" (kernels/reduce_add)
     mean: bool = True
@@ -108,13 +110,30 @@ class Communicator:
         self.world = 1
         for s in self.axis_sizes:
             self.world *= s
-        self._ring_cfg = cfg.ring_config(codec=spec.codec)
+        codec = (cfg.wire_codec if cfg.wire_codec is not None
+                 else spec.codec)
+        if codec not in (None, "int8"):
+            raise ValueError(f"unknown wire_codec {codec!r} "
+                             f"(supported: 'int8')")
+        if cfg.wire_codec is not None and cfg.wire_dtype is not None:
+            raise ValueError("wire_codec and wire_dtype are exclusive wire "
+                             "formats; set at most one")
+        self.codec = codec
+        # codec-capable (ring-family) transports carry the int8 payload on
+        # every hop; others (psum) reduce locally-dequantized fp32 spans,
+        # so their ring config stays lossless and the wire is priced fp32
+        self._ring_cfg = cfg.ring_config(
+            codec=codec if spec.supports_codec else None)
         self.transport: Transport = cls(self.axes, self._ring_cfg)
         pad = self.transport.flat_divisor(self.axis_sizes)
+        if codec is not None:
+            # quantized segments hold whole codec blocks even when the
+            # transport's own divisor (e.g. psum) does not include them
+            pad = math.lcm(pad, cfg.codec_block)
         self.bucketer = GradientBucketer(bucket_bytes=cfg.bucket_bytes,
                                          pad_multiple=pad)
         self._ef = (ErrorFeedback(self._ring_cfg.make_codec())
-                    if spec.codec is not None else None)
+                    if self._ring_cfg.codec is not None else None)
 
     # -- layout / planning ---------------------------------------------------
 
@@ -150,8 +169,13 @@ class Communicator:
         # silent layout: plan() runs for every dry-run/roofline cell; the
         # oversized-leaf warning belongs to actual arena construction
         layout = self.arena_layout(tree, warn=False, _chans=chans)
+        # quantized arenas move their (padded) payload elements at the
+        # codec's bytes/elem; the trailing scale segment never travels as
+        # a unit — scales ride each span's hop payload (priced by the
+        # codec's wire_bytes) or stay local under fp32-wire transports
+        wire_elems = getattr(layout, "payload_elems", layout.total_elems)
         arena_bytes = self.transport.predicted_bytes_per_device(
-            layout.total_elems, self.axis_sizes)
+            wire_elems, self.axis_sizes)
         return CommPlan(transport=self.cfg.transport, axes=self.axes,
                         axis_sizes=self.axis_sizes, bucket_plan=bplan,
                         channels=chans, wire_bytes_per_elem=wire_per_elem,
@@ -160,19 +184,24 @@ class Communicator:
                         arena_layout=layout,
                         arena_bytes_per_device=arena_bytes,
                         arena_messages_per_device=(msgs_per_unit
-                                                   * layout.n_spans))
+                                                   * layout.n_spans),
+                        wire_codec=self.codec,
+                        codec_block=self.cfg.codec_block)
 
     def arena_layout(self, tree, *, warn: bool = True,
                      _chans: tuple[ChannelAssignment, ...] | None = None
-                     ) -> "ArenaLayout":
+                     ) -> "ArenaLayout | QuantArenaLayout":
         """The page-quantized arena placement of ``tree``'s buckets:
         segment offsets/sizes quantized to ``cfg.page_bytes`` (lcm'd with
         the transport's flat divisor so fused spans stay reduce-scatter
         legal), segments grouped into one contiguous span per virtual
-        channel.  (``bucketer.plan`` is signature-cached, so repeated
-        calls on the same tree shape replan nothing; ``_chans`` lets
-        :meth:`plan` reuse its striping.)"""
-        from repro.mem.layout import arena_from_bucket_plan
+        channel.  Under a wire codec this is the int8
+        :class:`~repro.mem.layout.QuantArenaLayout` (payload + trailing
+        scale segment).  (``bucketer.plan`` is signature-cached, so
+        repeated calls on the same tree shape replan nothing; ``_chans``
+        lets :meth:`plan` reuse its striping.)"""
+        from repro.mem.layout import (arena_from_bucket_plan,
+                                      quant_arena_from_bucket_plan)
 
         bplan = self.bucketer.plan(tree)
         chans = (_chans if _chans is not None
@@ -181,18 +210,28 @@ class Communicator:
         for a in chans:
             for b in a.buckets:
                 chan_of[b] = a.channel
+        if self.codec is not None:
+            return quant_arena_from_bucket_plan(
+                bplan, page_bytes=self.cfg.page_bytes,
+                block=self.cfg.codec_block, channel_of=chan_of,
+                pad_multiple=self.bucketer.pad_multiple,
+                bucket_bytes=self.cfg.bucket_bytes, warn_oversized=warn)
         return arena_from_bucket_plan(
             bplan, page_bytes=self.cfg.page_bytes, channel_of=chan_of,
             pad_multiple=self.bucketer.pad_multiple,
             bucket_bytes=self.cfg.bucket_bytes, warn_oversized=warn)
 
-    def arena(self, tree) -> "CommArena":
-        """A :class:`~repro.mem.arena.CommArena` over :meth:`arena_layout`;
-        the pack/unpack implementation follows ``cfg.local_op`` (the same
-        knob that selects the Pallas ring-step accumulate)."""
-        from repro.mem.arena import CommArena
+    def arena(self, tree) -> "CommArena | QuantCommArena":
+        """A :class:`~repro.mem.arena.CommArena` (or
+        :class:`~repro.mem.arena.QuantCommArena` under a wire codec) over
+        :meth:`arena_layout`; the pack/unpack implementation follows
+        ``cfg.local_op`` (the same knob that selects the Pallas ring-step
+        accumulate)."""
+        from repro.mem.arena import CommArena, QuantCommArena
 
         impl = "pallas" if self.cfg.local_op == "pallas" else "jnp"
+        if self.codec is not None:
+            return QuantCommArena(self.arena_layout(tree), impl=impl)
         return CommArena(self.arena_layout(tree), impl=impl)
 
     # -- channelized execution (inside a fully-manual shard_map) -------------
@@ -393,8 +432,9 @@ class Communicator:
 
     def reduce_scheduled(self, grad_fn, params, batch,
                          schedule: CommSchedule, *, op: str = "all_reduce",
-                         arena: "CommArena | None" = None,
-                         arena_buf: jax.Array | None = None):
+                         arena: "CommArena | QuantCommArena | None" = None,
+                         arena_buf: jax.Array | None = None,
+                         ef_buf: jax.Array | None = None):
         """Run ``grad_fn(params, microbatch) -> (loss, grads)`` over
         ``schedule.microbatches`` slices of ``batch`` (split on the leading
         axis), issuing each gradient bucket's collective at its schedule
@@ -431,6 +471,18 @@ class Communicator:
         * ``"none"``           -> ``(loss, (tree, arena_out))`` — the arena
           is the microbatch accumulation buffer (FSDP: reduction rides the
           gather transpose, so only residency changes).
+
+        **Quantized arena mode** (``arena`` a
+        :class:`~repro.mem.arena.QuantCommArena`): packing *encodes* (fused
+        pack+quantize with the ``ef_buf`` error-feedback accumulator
+        compensated at pack time), spans are decoded to fp32 before the
+        collective (codec-capable transports re-encode on every hop, so
+        the wire carries int8 + scales; others reduce fp32), and the
+        reduced values re-encode into the arena for the fused
+        dequant+unpack out.  Every return gains the threaded-back ``ef``:
+        ``(loss, (tree, arena_out, ef_out))`` for ``all_reduce``/``none``,
+        ``(loss, (span_shards, bucket_plan, arena_out, ef_out))`` for
+        ``reduce_scatter``.
         """
         if op not in ("all_reduce", "reduce_scatter", "none"):
             raise ValueError(f"op must be all_reduce|reduce_scatter|none, "
@@ -440,6 +492,12 @@ class Communicator:
                 f"transport {self.cfg.transport!r} does not support "
                 f"reduce-scatter (supports_rs=False)")
         if arena is not None:
+            from repro.mem.arena import QuantCommArena
+
+            if isinstance(arena, QuantCommArena):
+                return self._reduce_scheduled_arena_quant(
+                    grad_fn, params, batch, schedule, op, arena, arena_buf,
+                    ef_buf)
             return self._reduce_scheduled_arena(grad_fn, params, batch,
                                                 schedule, op, arena,
                                                 arena_buf)
@@ -648,6 +706,132 @@ class Communicator:
             acc = acc * jnp.asarray(1.0 / self.world, jnp.float32)
         tree = self.bucketer.debucketize(arena.unpack(acc), bplan)
         return loss, (tree, acc)
+
+    def _reduce_scheduled_arena_quant(self, grad_fn, params, batch,
+                                      schedule: CommSchedule, op: str,
+                                      arena: "QuantCommArena",
+                                      arena_buf: jax.Array | None,
+                                      ef_buf: jax.Array | None):
+        """Quantized-arena body of :meth:`reduce_scheduled` (see there).
+
+        The int8 arena cannot accumulate across microbatches, so gradients
+        accumulate in fp32 (bucket lists, or reduced span values under the
+        streamed policy) and the arena encodes at issue boundaries: fused
+        pack+quantize on the way in (error feedback compensated from
+        ``ef_buf``, residual written back), span dequant before each
+        collective, and — for ``all_reduce`` — a final re-encode of the
+        reduced mean so the gradient the caller sees comes out of the fused
+        dequant+unpack, exactly what the next step's wire would carry.
+        """
+        layout = arena.layout
+        if not self.axes:
+            raise ValueError("arena mode needs data axes; this "
+                             "communicator's mesh has none")
+        if op != "none":
+            if not self.cfg.fuse:
+                raise ValueError("arena mode needs fused aligned buckets "
+                                 "(fuse=True)")
+            if schedule.n_buckets != layout.n_spans:
+                raise ValueError(
+                    f"arena mode expects a span-level schedule with "
+                    f"{layout.n_spans} spans, got {schedule.n_buckets}; "
+                    f"build it with Communicator.arena_schedule")
+        m = max(schedule.microbatches, 1)
+        collective = (self.transport.all_reduce if op == "all_reduce"
+                      else self.transport.reduce_scatter)
+        micro = (jax.tree.map(
+            lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch)
+            if m > 1 else None)
+        inv = 1.0 / m
+        deps: dict[int, jax.Array] = {}
+        chained = schedule.channels >= 1
+
+        def issue(span_vals, channel):
+            if not chained:
+                return collective(span_vals)
+            y = collective(order_token(deps.get(channel), span_vals))
+            deps[channel] = y.reshape(-1)[0]
+            return y
+
+        buf = arena_buf if arena_buf is not None else arena.zeros()
+        ef = ef_buf
+        streamed = schedule.policy != "accumulate_then_reduce"
+        losses = []
+        span_acc: list | None = None   # fp32 reduced spans (AR) / shards (RS)
+        bucket_acc: list | None = None  # accumulate_then_reduce fp32 buckets
+        leaf_acc: list | None = None    # op == "none" fp32 leaves
+        bplan: BucketPlan | None = None
+        treedef = None
+        leaf_meta: list[tuple] = []
+
+        def run_phase(phase):
+            """Decode each of the phase's spans and issue its collective."""
+            nonlocal buf
+            out: list = [None] * layout.n_spans
+            for slot in schedule.slots_for_phase(phase):
+                for s in slot.bucket_ids:       # span indices
+                    out[s] = issue(arena.dequant_span(buf, s), slot.channel)
+            return out
+
+        for i in range(m):
+            mb = batch if m == 1 else jax.tree.map(lambda x: x[i], micro)
+            loss, grads = grad_fn(params, mb)
+            losses.append(loss)
+            if op == "none":
+                leaves, treedef = jax.tree.flatten(grads)
+                if len(leaves) != layout.n_segments:
+                    raise ValueError(
+                        f"arena has {layout.n_segments} segments but the "
+                        f"gradient tree has {len(leaves)} leaves; build "
+                        f"the arena from the same tree")
+                leaf_meta = [(l.shape, l.dtype) for l in leaves]
+                flat = [l.reshape(-1).astype(jnp.float32) for l in leaves]
+                if m > 1:
+                    flat = [l * inv for l in flat]
+                leaf_acc = (flat if leaf_acc is None
+                            else [a + l for a, l in zip(leaf_acc, flat)])
+                continue
+            buckets, bplan = self.bucketer.bucketize(grads)
+            if bplan.n_buckets != layout.n_segments:
+                raise ValueError(
+                    f"arena has {layout.n_segments} segments but the "
+                    f"gradient tree bucketizes into {bplan.n_buckets}; "
+                    f"build the arena with Communicator.arena on the same "
+                    f"tree")
+            buckets = [b.astype(jnp.float32) for b in buckets]
+            if m > 1:
+                buckets = [b * inv for b in buckets]
+            if not streamed:
+                bucket_acc = (buckets if bucket_acc is None
+                              else [a + b
+                                    for a, b in zip(bucket_acc, buckets)])
+                continue
+            buf, ef = arena.pack_into(buf, buckets, ef)
+            out = run_phase(i)
+            span_acc = (out if span_acc is None
+                        else [a + o for a, o in zip(span_acc, out)])
+        if op != "none" and not streamed:
+            buf, ef = arena.pack_into(buf, bucket_acc, ef)
+            span_acc = run_phase(m - 1)
+        loss = losses[0] if m == 1 else jnp.mean(jnp.stack(losses))
+        if op == "none":
+            buf, ef = arena.pack_into(buf, leaf_acc, ef)
+            leaves = arena.unpack(buf)
+            leaves = [u.reshape(shape).astype(jnp.float32 if m > 1
+                                              else dtype)
+                      for u, (shape, dtype) in zip(leaves, leaf_meta)]
+            return loss, (jax.tree.unflatten(treedef, leaves), buf, ef)
+        if op == "reduce_scatter":
+            inv_w = jnp.asarray(1.0 / self.world if self.cfg.mean else 1.0,
+                                jnp.float32)
+            return loss, ([s * inv_w for s in span_acc], bplan, buf, ef)
+        if self.cfg.mean:
+            inv_w = jnp.asarray(1.0 / self.world, jnp.float32)
+            span_acc = [s * inv_w for s in span_acc]
+        for s, vals in enumerate(span_acc):
+            buf = arena.requant_span(buf, s, vals)
+        tree = self.bucketer.debucketize(arena.unpack(buf), bplan)
+        return loss, (tree, buf, ef)
 
     # -- SPMD wrappers (called OUTSIDE shard_map) ----------------------------
 

@@ -31,6 +31,12 @@ ALPHA_S = 1.5e-6
 # terms: :class:`LatencyModel` here and ``repro.launch.roofline.ICI_BW``.
 LINK_BANDWIDTH = 50e9
 
+# Per-chip HBM bandwidth, bytes/s (v5e).  Single source for the roofline
+# memory term and the codec kernel-time pricing in
+# :meth:`CommPlan.codec_tradeoff` — the fused pack+quantize/dequant passes
+# are pure streaming kernels, so their cost is HBM bytes over this number.
+HBM_BANDWIDTH = 819e9
+
 
 @dataclass(frozen=True)
 class LatencyModel:
@@ -97,6 +103,11 @@ class CommPlan:
     arena_layout: "object | None" = None     # repro.mem.layout.ArenaLayout
     arena_bytes_per_device: float = 0.0      # wire bytes incl. page padding
     arena_messages_per_device: float = 0.0   # α term at one send per span
+    # quantized wire (repro.kernels.pack_quant): codec identity, priced so
+    # the compressed prediction is checkable against lowered HLO at 0
+    # tolerance (mem-suite codec cells) and against the fp32 twin.
+    wire_codec: str | None = None            # None | "int8"
+    codec_block: int = 512                   # absmax block (elems per scale)
 
     @property
     def n_buckets(self) -> int:
@@ -159,6 +170,58 @@ class CommPlan:
         return model.collective_seconds(self.messages_per_device,
                                         self.bytes_per_device)
 
+    def codec_tradeoff(self, model: LatencyModel = LatencyModel(),
+                       hbm_bandwidth: float = HBM_BANDWIDTH) -> dict:
+        """Price the quantized wire end-to-end: fp32 vs int8+scales.
+
+        Compression is not free — the fused pack+quantize and dequant
+        kernels stream the payload through HBM, so the honest comparison is
+
+            t_fp32  = α·msgs + bytes_fp32 / bw_link
+            t_codec = α·msgs + bytes_codec / bw_link + hbm_bytes / bw_hbm
+
+        with the same message count on both sides (the codec shrinks hop
+        *payloads*, not hop counts).  Kernel HBM traffic per reduction,
+        per payload element of ``w = 1 + 4/block`` wire bytes: encode
+        reads the fp32 gradient and the error-feedback accumulator,
+        writes the accumulator and the wire form (``4+4+4+w``); decode
+        reads the wire form and writes fp32 (``w+4``).
+
+        Computed for this plan's codec, or as a what-if at ``codec_block``
+        when ``wire_codec`` is ``None`` (``applied`` says which).  Arena
+        plans price the arena wire bytes (page padding included).
+        """
+        nbytes = (self.arena_bytes_per_device if self.arena_layout is not None
+                  else self.bytes_per_device)
+        msgs = (self.arena_messages_per_device if self.arena_layout is not None
+                else self.messages_per_device)
+        wpe_q = 1.0 + 4.0 / self.codec_block
+        if self.wire_codec is not None:
+            codec_bytes = nbytes
+            fp32_bytes = nbytes * 4.0 / self.wire_bytes_per_elem
+        else:
+            fp32_bytes = nbytes * 4.0 / self.wire_bytes_per_elem
+            codec_bytes = fp32_bytes * wpe_q / 4.0
+        elems = self.total_elems
+        kernel_bytes = elems * ((4.0 + 4.0 + 4.0 + wpe_q) + (wpe_q + 4.0))
+        kernel_s = kernel_bytes / hbm_bandwidth
+        t_fp32 = model.collective_seconds(msgs, fp32_bytes)
+        t_codec = model.collective_seconds(msgs, codec_bytes) + kernel_s
+        return {
+            "applied": self.wire_codec is not None,
+            "codec": self.wire_codec or "int8",
+            "codec_block": self.codec_block,
+            "wire_bytes_fp32": fp32_bytes,
+            "wire_bytes_codec": codec_bytes,
+            "compression_ratio": fp32_bytes / codec_bytes if codec_bytes
+            else 0.0,
+            "kernel_hbm_bytes": kernel_bytes,
+            "t_kernel_s": kernel_s,
+            "t_fp32_s": t_fp32,
+            "t_codec_s": t_codec,
+            "speedup": t_fp32 / t_codec if t_codec else 0.0,
+        }
+
     def describe(self) -> dict:
         """JSON-friendly summary for the dry-run report."""
         out = {
@@ -175,6 +238,10 @@ class CommPlan:
         }
         if self.arena_layout is not None:
             out["arena"] = self.arena_layout.describe()
+        if self.wire_codec is not None:
+            out["wire_codec"] = self.wire_codec
+            out["codec_block"] = self.codec_block
+            out["codec"] = self.codec_tradeoff()
         return out
 
 

@@ -14,7 +14,7 @@ Built-in transports (the former ``ReduceConfig.policy`` branches):
 ========================  ====================================================
 ``ring``                  flat multi-channel bidirectional ring (pod-oblivious)
 ``ring_hier``             pod-aware hierarchical ring (RS inner, recurse outer)
-``ring_compressed``       hierarchical ring with int8 block codec on the wire
+``ring_compressed``       deprecated shim: ring_hier + ``wire_codec='int8'``
 ``psum``                  XLA's native all-reduce (vendor reference)
 ========================  ====================================================
 
@@ -172,7 +172,7 @@ class Transport:
 
 
 @register_transport(
-    "ring", supports_rs=True,
+    "ring", supports_rs=True, supports_codec=True,
     description="flat multi-channel bidirectional ppermute ring; every byte "
                 "crosses every axis at full size (pod-oblivious baseline)")
 class RingTransport(Transport):
@@ -199,7 +199,7 @@ class RingTransport(Transport):
 
 
 @register_transport(
-    "ring_hier", supports_rs=True, hierarchical=True,
+    "ring_hier", supports_rs=True, supports_codec=True, hierarchical=True,
     description="pod-aware hierarchical ring: reduce-scatter the intra-pod "
                 "axis first so cross-pod bytes shrink by the pod size")
 class HierRingTransport(RingTransport):
@@ -213,10 +213,18 @@ class HierRingTransport(RingTransport):
 @register_transport(
     "ring_compressed", supports_rs=True, supports_codec=True, codec="int8",
     hierarchical=True, wire_dtypes=(None,),
-    description="hierarchical ring carrying block-int8 payloads with "
-                "source error feedback (beyond-paper)")
+    description="deprecated shim: exactly ring_hier with wire_codec='int8' "
+                "(prefer the CommConfig knob, which also enables the fused "
+                "arena pack+quantize path)")
 class CompressedRingTransport(HierRingTransport):
-    """Hierarchical ring with an int8 block codec on every hop."""
+    """Deprecated shim: ``ring_hier`` whose spec pins ``codec='int8'``.
+
+    Kept so existing configs keep running; the codec is now a
+    :class:`~repro.comm.api.CommConfig` knob (``wire_codec``) orthogonal to
+    the transport, and only the knob form gets the quantized-arena path
+    (fused pack+quantize, error feedback in the train state, priced wire
+    bytes).  Same hops, same codec, same numbers as before.
+    """
 
 
 @register_transport(

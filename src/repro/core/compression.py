@@ -1,10 +1,23 @@
-"""Wire codecs + error feedback for gradient reduction (beyond-paper).
+"""DEPRECATED shim: wire codecs + error feedback for gradient reduction.
 
-The paper drives the fabric at 70-90 % of wirespeed; once there, the only
-remaining lever is *sending fewer bytes*.  We add block-quantised int8 wire
-compression with error feedback — a standard distributed-optimisation trick
-that composes with the paper's schedule: each ring hop carries ``(int8 q,
-fp32 block scales)`` instead of fp32, cutting collective bytes ~3.8x.
+This module is the original pytree-payload codec layer used by
+``core.ring``'s ``ring_compressed`` transport.  It is superseded by the
+first-class quantized wire on the arena path:
+
+* ``repro.kernels.pack_quant`` — fused Pallas pack+quantize into the donated
+  ``QuantCommArena`` (int8 payload + fp32 block scales in one pass), with
+  error-feedback residuals as a train-state leaf;
+* ``CommConfig.wire_codec="int8"`` (or ``--wire-codec int8`` on the launch
+  drivers) — applies the codec to any ring-family transport's scheduled
+  arena reduction, priced end-to-end by ``CommPlan.codec_tradeoff``.
+
+Prefer ``wire_codec`` over the ``ring_compressed`` transport: the shim keeps
+the original eager encode/decode semantics (kept bit-identical for the
+pinned tests and as the reference the fused kernels are checked against) but
+does not fuse packing with quantization and carries no arena layout.  The
+quantization math here is the single source of truth — ``kernels/quant/ref``
+and ``kernels/pack_quant/ref`` mirror it exactly:
+``scale = max(absmax/127, tiny)``; ``q = clip(round(x/scale), ±127)``.
 
 Codecs are pytree-payload transforms used by ``core.ring``:
 

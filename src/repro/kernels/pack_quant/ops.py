@@ -1,0 +1,86 @@
+"""Jit'd wrappers: fused quantizing arena writes / dequantizing reads.
+
+``write_quant_flat`` / ``read_dequant_flat`` are the ``impl='pallas'``
+hooks of :class:`repro.mem.arena.QuantCommArena`: they view the flat int8
+arena and the fp32 segment payload as (rows, 128) lane tiles and run the
+fused pack+quantize / dequant+unpack kernels (interpret mode off-TPU).
+Shapes or offsets not meeting the int8 (32·128) + whole-quant-block
+alignment fall back to the jnp oracle in ``ref.py``, which is *bitwise*
+the kernel arithmetic — correctness is never conditional on the fast
+path.
+
+Scale bytes ride the trailing scale segment of the same arena; they are
+written through :func:`repro.kernels.pack.write_flat` (a few bytes per
+span — almost always the dynamic-update-slice fallback) so the whole
+encode stays a single aliased in-place update chain on the donated
+buffer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import default_interpret
+from repro.kernels.pack import ops as pack_ops
+from repro.kernels.pack_quant import ref
+from repro.kernels.pack_quant.pack_quant import (LANES, _block_rows,
+                                                 read_dequant_rows_2d,
+                                                 write_quant_rows_2d)
+
+
+def _tileable(size: int, offset: int, total: int, block: int) -> bool:
+    if block % LANES or size % block or offset % block:
+        return False
+    if size % LANES or offset % LANES or total % LANES:
+        return False
+    return _block_rows(size // LANES, offset // LANES, block // LANES) > 0
+
+
+def write_quant_flat(arena: jax.Array, src: jax.Array, offset: int,
+                     scale_offset: int, block: int, *,
+                     interpret: bool | None = None):
+    """Quantize flat ``src`` into ``arena[offset : offset + n]`` + trailing
+    scales; returns ``(arena, residual)`` (see the ref oracle)."""
+    if arena.ndim != 1 or src.ndim != 1:
+        raise ValueError(f"flat buffers expected, got {arena.shape} / "
+                         f"{src.shape}")
+    if arena.dtype != jnp.int8:
+        raise ValueError(f"int8 arena expected, got {arena.dtype}")
+    n = src.shape[0]
+    if n % block != 0:
+        raise ValueError(f"size {n} not divisible by block {block}")
+    if not _tileable(n, offset, arena.shape[0], block):
+        return ref.write_quant_flat(arena, src, offset, scale_offset, block)
+    interpret = default_interpret() if interpret is None else interpret
+    out, scales, residual = write_quant_rows_2d(
+        arena.reshape(-1, LANES), src.reshape(-1, LANES), offset // LANES,
+        block, interpret=interpret)
+    sbytes = lax.bitcast_convert_type(scales.reshape(-1),
+                                      jnp.int8).reshape(-1)
+    out = pack_ops.write_flat(
+        out.reshape(-1), sbytes,
+        ref.scale_byte_offset(scale_offset, offset, block),
+        interpret=interpret)
+    return out, residual.reshape(-1)
+
+
+def read_dequant_flat(arena: jax.Array, offset: int, size: int,
+                      scale_offset: int, block: int, *,
+                      interpret: bool | None = None) -> jax.Array:
+    """Fused dequant+unpack of ``arena[offset : offset + size]`` to flat
+    fp32."""
+    if arena.ndim != 1:
+        raise ValueError(f"flat arena expected, got {arena.shape}")
+    if size % block != 0:
+        raise ValueError(f"size {size} not divisible by block {block}")
+    if not _tileable(size, offset, arena.shape[0], block):
+        return ref.read_dequant_flat(arena, offset, size, scale_offset,
+                                     block)
+    interpret = default_interpret() if interpret is None else interpret
+    scales = ref.read_scales_flat(arena, offset, size, scale_offset, block)
+    out = read_dequant_rows_2d(arena.reshape(-1, LANES),
+                               scales.reshape(-1, 1), offset // LANES,
+                               size // LANES, block, interpret=interpret)
+    return out.reshape(-1)

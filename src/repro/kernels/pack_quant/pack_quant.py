@@ -1,0 +1,116 @@
+"""Fused pack+quantize kernels for the quantized communication arena.
+
+The fp32 arena pack (:mod:`repro.kernels.pack`) is a pure copy; under a
+wire codec the same pass can also *encode*.  One VMEM trip per tile: load
+the bucket rows, reduce the per-block absmax, scale/round/clip to int8,
+write the payload **in place** into the aliased arena rows, and emit the
+fp32 scales plus the quantization residual (the error-feedback update) —
+the paper's T1/T4 copy loop and the wire codec fused into one kernel, so
+compressing costs one extra read-modify-write of the bucket instead of a
+separate quantize pass over a staging buffer.
+
+Tiling: the flat int8 arena and the fp32 source are viewed as (rows, 128)
+lane tiles; a tile height must satisfy the int8 (32, 128) min tile *and*
+hold whole quant blocks (``block // 128`` rows each) so every scale is
+computed from one tile.  Misaligned extents fall back to the bitwise jnp
+oracle in ``ops.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+SUBLANES_I8 = 32           # int8 min tile is (32, 128)
+MAX_BLOCK_ROWS = 1024
+
+
+def _block_rows(rows: int, row_offset: int, q_rows: int) -> int:
+    """Largest tile height dividing both the copy extent and its alignment
+    that is int8-tile legal and holds whole quant blocks; 0 when no such
+    tiling exists (caller falls back)."""
+    br = math.gcd(rows, MAX_BLOCK_ROWS)
+    if row_offset:
+        br = math.gcd(br, row_offset)
+    step = math.lcm(SUBLANES_I8, q_rows)
+    return br if br % step == 0 else 0
+
+
+def _pack_quant_kernel(block, _arena_ref, x_ref, q_ref, s_ref, r_ref):
+    x = x_ref[...].astype(jnp.float32)
+    xb = x.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(xb / scale), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8).reshape(x.shape)
+    s_ref[...] = scale
+    # int8 round-trips exactly through fp32, so q * scale is bitwise the
+    # decoded wire value and xb - q * scale is the exact EF residual
+    r_ref[...] = (xb - q * scale).reshape(x.shape)
+
+
+def write_quant_rows_2d(arena: jax.Array, src: jax.Array, row_offset: int,
+                        block: int, *, interpret: bool = False):
+    """Quantize ``src`` (rows, 128) fp32 into ``arena[row_offset:...]``
+    (int8, aliased in place); returns ``(arena, scales, residual)`` with
+    ``scales`` (rows·128/block, 1) fp32 and ``residual`` shaped like
+    ``src``."""
+    rows = src.shape[0]
+    q_rows = block // LANES
+    br = _block_rows(rows, row_offset, q_rows)
+    if br <= 0:
+        raise ValueError(f"no aligned tiling for rows={rows} at "
+                         f"offset={row_offset} block={block}; use the "
+                         f"ops.py fallback")
+    grid = (rows // br,)
+    n_blocks = rows // q_rows
+    sb = br // q_rows
+    return pl.pallas_call(
+        functools.partial(_pack_quant_kernel, block),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, LANES), lambda i: (row_offset // br + i, 0)),
+                  pl.BlockSpec((br, LANES), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, LANES), lambda i: (row_offset // br + i, 0)),
+                   pl.BlockSpec((sb, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((br, LANES), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct(arena.shape, jnp.int8),
+                   jax.ShapeDtypeStruct((n_blocks, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, LANES), jnp.float32)],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(arena, src)
+
+
+def _dequant_read_kernel(block, arena_ref, s_ref, o_ref):
+    q = arena_ref[...].astype(jnp.float32).reshape(-1, block)
+    o_ref[...] = (q * s_ref[...]).reshape(o_ref.shape)
+
+
+def read_dequant_rows_2d(arena: jax.Array, scales: jax.Array,
+                         row_offset: int, rows: int, block: int, *,
+                         interpret: bool = False) -> jax.Array:
+    """Fused dequant+unpack: decode ``arena[row_offset : row_offset+rows]``
+    (int8) against ``scales`` (rows·128/block, 1) into a fresh fp32
+    (rows, 128) buffer."""
+    q_rows = block // LANES
+    br = _block_rows(rows, row_offset, q_rows)
+    if br <= 0:
+        raise ValueError(f"no aligned tiling for rows={rows} at "
+                         f"offset={row_offset} block={block}; use the "
+                         f"ops.py fallback")
+    grid = (rows // br,)
+    sb = br // q_rows
+    return pl.pallas_call(
+        functools.partial(_dequant_read_kernel, block),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, LANES), lambda i: (row_offset // br + i, 0)),
+                  pl.BlockSpec((sb, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(arena, scales)

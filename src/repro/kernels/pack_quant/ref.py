@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the fused pack+quantize arena kernels.
+
+Arithmetic is exactly :mod:`repro.kernels.quant.ref` (block-absmax int8);
+the scale of every quant block is bitcast fp32 -> 4 int8 bytes and stored
+in the trailing scale segment of the same flat int8 arena, so one donated
+buffer carries payload *and* scales across the step boundary.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.quant import ref as quant_ref
+
+SCALE_BYTES = 4  # one fp32 scale per quant block
+
+
+def scale_byte_offset(scale_offset: int, offset: int, block: int) -> int:
+    """Arena byte index of the scale for the quant block starting at
+    payload element ``offset`` (offsets are block multiples by layout)."""
+    return scale_offset + (offset // block) * SCALE_BYTES
+
+
+def write_quant_flat(arena: jax.Array, src: jax.Array, offset: int,
+                     scale_offset: int, block: int):
+    """Quantize flat ``src`` into ``arena[offset : offset + n]`` (int8
+    payload) + bitcast fp32 scales into the trailing scale segment; returns
+    ``(arena, residual)`` with ``residual = src - dequant(quant(src))`` for
+    error feedback."""
+    x = src.astype(jnp.float32).reshape(-1, block)
+    q, s = quant_ref.quantize_blocks(x)
+    residual = (x - quant_ref.dequantize_blocks(q, s)).reshape(-1)
+    arena = lax.dynamic_update_slice_in_dim(arena, q.reshape(-1), offset,
+                                            axis=0)
+    sbytes = lax.bitcast_convert_type(s.reshape(-1), jnp.int8).reshape(-1)
+    arena = lax.dynamic_update_slice_in_dim(
+        arena, sbytes, scale_byte_offset(scale_offset, offset, block), axis=0)
+    return arena, residual
+
+
+def read_scales_flat(arena: jax.Array, offset: int, size: int,
+                     scale_offset: int, block: int) -> jax.Array:
+    """The fp32 scales of ``arena[offset : offset + size]`` — the trailing
+    scale bytes sliced out and bitcast back, shape ``(size // block,)``."""
+    lo = scale_byte_offset(scale_offset, offset, block)
+    hi = scale_byte_offset(scale_offset, offset + size, block)
+    sbytes = lax.slice_in_dim(arena, lo, hi, axis=0)
+    return lax.bitcast_convert_type(sbytes.reshape(-1, SCALE_BYTES),
+                                    jnp.float32)
+
+
+def read_dequant_flat(arena: jax.Array, offset: int, size: int,
+                      scale_offset: int, block: int) -> jax.Array:
+    """Fused dequant+unpack: ``arena[offset : offset + size]`` decoded to
+    flat fp32 using the trailing scales."""
+    q = lax.slice_in_dim(arena, offset, offset + size, axis=0)
+    s = read_scales_flat(arena, offset, size, scale_offset, block)
+    return quant_ref.dequantize_blocks(q.reshape(-1, block),
+                                       s.reshape(-1, 1)).reshape(-1)

@@ -2,7 +2,11 @@
 
 ``quantize``/``dequantize`` take flat payloads + a block size, reshape to
 (n_blocks, block), and dispatch to Pallas (interpret off-TPU) or the jnp
-oracle when the layout is not lane-aligned.
+oracle when the layout is not tileable.  The fallback is *bitwise* the
+kernel's arithmetic (same ops in the same order), so misaligned shapes —
+block not a multiple of 128 lanes, or a block count with no (32, 128)
+int8-legal tile — are a performance cliff, never a numerics change
+(``kernels.pack``'s fallback-is-the-oracle contract).
 """
 
 from __future__ import annotations
@@ -12,9 +16,14 @@ import jax.numpy as jnp
 
 from repro.kernels import default_interpret
 from repro.kernels.quant import ref
-from repro.kernels.quant.quant import dequantize_blocks, quantize_blocks
+from repro.kernels.quant.quant import (dequantize_blocks, quantize_blocks,
+                                       rows_per_tile)
 
 LANES = 128
+
+
+def _tileable(n_blocks: int, block: int) -> bool:
+    return block % LANES == 0 and rows_per_tile(n_blocks) > 0
 
 
 def quantize(x: jax.Array, block: int = 512, *, interpret: bool | None = None):
@@ -23,7 +32,7 @@ def quantize(x: jax.Array, block: int = 512, *, interpret: bool | None = None):
     if n % block != 0:
         raise ValueError(f"size {n} not divisible by block {block}")
     xb = x.reshape(-1, block)
-    if block % LANES != 0:
+    if not _tileable(n // block, block):
         q, s = ref.quantize_blocks(xb)
     else:
         interpret = default_interpret() if interpret is None else interpret
@@ -38,7 +47,7 @@ def dequantize(q: jax.Array, scales: jax.Array, block: int = 512, *,
         raise ValueError(f"size {n} not divisible by block {block}")
     qb = q.reshape(-1, block)
     sb = scales.reshape(-1, 1)
-    if block % LANES != 0:
+    if not _tileable(n // block, block):
         out = ref.dequantize_blocks(qb, sb)
     else:
         interpret = default_interpret() if interpret is None else interpret

@@ -11,13 +11,23 @@ blocks.  Scales are fp32, one per block (row).
 
 from __future__ import annotations
 
-import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_ROWS_PER_TILE = 256
+SUBLANES_I8 = 32           # int8 min tile is (32, 128)
+
+
+def rows_per_tile(n_blocks: int,
+                  max_rows: int = DEFAULT_ROWS_PER_TILE) -> int:
+    """Largest tile height that divides ``n_blocks`` and meets the int8
+    (32, 128) min tile; 0 when none exists (caller falls back to the jnp
+    oracle in ``ref.py`` — same contract as ``kernels.pack._block_rows``)."""
+    rpt = math.gcd(n_blocks, max_rows)
+    return rpt if rpt % SUBLANES_I8 == 0 else 0
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -34,13 +44,14 @@ def _dequant_kernel(q_ref, s_ref, o_ref):
     o_ref[...] = q * s_ref[...]
 
 
-def quantize_blocks(x: jax.Array, *, rows_per_tile: int = DEFAULT_ROWS_PER_TILE,
+def quantize_blocks(x: jax.Array, *, max_rows: int = DEFAULT_ROWS_PER_TILE,
                     interpret: bool = False):
     """``x``: (n_blocks, block) fp32 -> (int8 q of same shape, fp32 (n_blocks, 1))."""
     n_blocks, block = x.shape
-    rpt = min(rows_per_tile, n_blocks)
-    if n_blocks % rpt != 0:
-        rpt = n_blocks
+    rpt = rows_per_tile(n_blocks, max_rows)
+    if rpt <= 0:
+        raise ValueError(f"no (32, 128)-aligned tiling for {n_blocks} quant "
+                         f"blocks; use the ops.py fallback")
     grid = (n_blocks // rpt,)
     return pl.pallas_call(
         _quant_kernel,
@@ -55,12 +66,13 @@ def quantize_blocks(x: jax.Array, *, rows_per_tile: int = DEFAULT_ROWS_PER_TILE,
 
 
 def dequantize_blocks(q: jax.Array, scale: jax.Array, *,
-                      rows_per_tile: int = DEFAULT_ROWS_PER_TILE,
+                      max_rows: int = DEFAULT_ROWS_PER_TILE,
                       interpret: bool = False) -> jax.Array:
     n_blocks, block = q.shape
-    rpt = min(rows_per_tile, n_blocks)
-    if n_blocks % rpt != 0:
-        rpt = n_blocks
+    rpt = rows_per_tile(n_blocks, max_rows)
+    if rpt <= 0:
+        raise ValueError(f"no (32, 128)-aligned tiling for {n_blocks} quant "
+                         f"blocks; use the ops.py fallback")
     grid = (n_blocks // rpt,)
     return pl.pallas_call(
         _dequant_kernel,

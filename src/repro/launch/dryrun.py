@@ -444,14 +444,203 @@ def run_mem_cell(arch: str, page_bytes: int, bucket_mb: float, *,
     }
 
 
+def _count_pallas_calls(jaxpr, name_substr: str) -> int:
+    """Recursively count ``pallas_call`` equations whose kernel name
+    contains ``name_substr`` (sub-jaxprs in eqn params included)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            name = str(eqn.params.get("name_and_src_info",
+                                      eqn.params.get("name", "")))
+            if name_substr in name:
+                n += 1
+        for v in eqn.params.values():
+            for u in (v if isinstance(v, (list, tuple)) else (v,)):
+                if hasattr(u, "jaxpr"):
+                    n += _count_pallas_calls(u.jaxpr, name_substr)
+    return n
+
+
+def run_mem_codec_cell(arch: str, page_bytes: int, bucket_mb: float, *,
+                       channels: int = 2, dp_mode: str = "replicated",
+                       wire_codec: str = "int8") -> dict:
+    """One quantized-wire mem cell: lower the ``dp_mode``'s gradient wire
+    path twice — fp32 and under ``wire_codec`` — over the arch's (reduced)
+    tree on an explicit ``ring`` transport, and hold the compressed
+    prediction to the optimized HLO with zero tolerance:
+
+    * **wire bytes** — parsed ``collective-permute`` operand bytes (int8
+      payload + fp32 block scales both ride the ppermutes) must equal
+      ``CommPlan.arena_bytes_per_device`` exactly, for the fp32 twin and
+      the codec run alike;
+    * **compression** — the codec cell must move ≥ 3.5× fewer
+      predicted-and-lowered bytes than its fp32 twin (the acceptance
+      ratio; ``1 + 4/block`` bytes/elem plus page padding);
+    * **kernels** — on a channel-free pack of the same tree, the fused
+      pack+quantize must lower to exactly one ``pallas_call`` per span
+      (one fused encode per contiguous segment, no per-block dispatch).
+
+    The three DP modes lower their own wire paths — ``replicated``
+    all-reduces spans, ``zero1`` reduce-scatters spans then all-gathers
+    the shards, ``fsdp`` lowers the reduce-scatter its weight-gather
+    transpose executes (half an all-reduce) — over the *same* span layout,
+    so the measured ratios must agree exactly across modes.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.comm import CommConfig
+    from repro.configs import reduced_config
+    from repro.runtime.train_step import _local_shapes, build_comm
+
+    mesh = compat.make_mesh((4, 1), ("data", "model"),
+                            devices=jax.devices()[:4])
+    n_dev = 4
+    model = build_model(reduced_config(arch))
+    op = "all_reduce" if dp_mode == "replicated" else "reduce_scatter"
+    gather_back = dp_mode == "zero1"      # fsdp keeps the shards
+
+    def build(codec):
+        tcfg = TrainStepConfig(
+            dp_mode="replicated",      # the comm config is mode-agnostic
+            comm=CommConfig(transport="ring", channels=channels,
+                            bucket_bytes=int(bucket_mb * 2**20),
+                            page_bytes=int(page_bytes), wire_codec=codec),
+            schedule="scheduled", use_arena=True)
+        return build_comm(mesh, tcfg)
+
+    def lower(comm):
+        pspecs = model.param_specs(mesh)
+        local = _local_shapes(model.abstract_params(), pspecs, mesh)
+        cplan = comm.plan(local)
+        layout = cplan.arena_layout
+        arena = comm.arena(local)
+        sched = comm.arena_schedule(local, "scheduled", 1)
+        quant = comm.codec is not None
+        grads_abs = model.abstract_params()
+        batch_abs = {"x": jax.ShapeDtypeStruct((1,), jnp.float32)}
+        flat = P(tuple(mesh.axis_names))
+
+        def grad_like(p, mb):
+            return jnp.zeros((), jnp.float32), p
+
+        def fn(buf, ef, grads, batch):
+            kw = dict(arena=arena, arena_buf=buf)
+            if quant:
+                kw["ef_buf"] = ef
+            _, out = comm.reduce_scheduled(grad_like, grads, batch, sched,
+                                           op=op, **kw)
+            if op == "all_reduce":
+                tree, buf = out[0], out[1]
+                ef = out[2] if quant else ef
+                return buf, ef, tree
+            shards, _, buf = out[0], out[1], out[2]
+            ef = out[3] if quant else ef
+            if gather_back:
+                shards = comm.all_gather(shards)
+            return buf, ef, shards
+
+        n_out = layout.n_spans if op != "all_reduce" else None
+        out_specs = (flat, flat,
+                     pspecs if op == "all_reduce" else [flat] * n_out)
+        f = jax.jit(compat.shard_map(
+            fn, mesh=mesh, in_specs=(flat, flat, pspecs, P()),
+            out_specs=out_specs, check_vma=False), donate_argnums=(0, 1))
+        arena_abs = jax.ShapeDtypeStruct((n_dev * layout.total_elems,),
+                                         jnp.dtype(layout.dtype))
+        ef_abs = jax.ShapeDtypeStruct(
+            (n_dev * getattr(layout, "payload_elems", 1),), jnp.float32)
+        compiled = f.lower(arena_abs, ef_abs, grads_abs, batch_abs).compile()
+        stats = collective_wire_bytes(compiled.as_text())
+        measured = sum(stats.op_bytes.values())
+        predicted = cplan.arena_bytes_per_device
+        if dp_mode == "fsdp":
+            predicted = predicted / 2.0   # RS is half the AR ring volume
+        if predicted and abs(measured - predicted) / predicted > 1e-9:
+            raise AssertionError(
+                f"{dp_mode}/{comm.codec or 'fp32'} wire bytes: predicted "
+                f"{predicted}, HLO {measured}")
+        return cplan, layout, predicted, measured
+
+    t0 = time.time()
+    with mesh:
+        comm_f32, comm_q = build(None), build(wire_codec)
+        _, _, pred_f32, meas_f32 = lower(comm_f32)
+        cplan_q, layout_q, pred_q, meas_q = lower(comm_q)
+
+        # fused pack+quantize: one kernel per span on a channel-free pack
+        tcfg_k = TrainStepConfig(
+            dp_mode="replicated",
+            comm=CommConfig(transport="ring", channels=0,
+                            bucket_bytes=int(bucket_mb * 2**20),
+                            page_bytes=int(page_bytes),
+                            wire_codec=wire_codec, local_op="pallas"),
+            schedule="scheduled", use_arena=True)
+        comm_k = build_comm(mesh, tcfg_k)
+        pspecs = model.param_specs(mesh)
+        local = _local_shapes(model.abstract_params(), pspecs, mesh)
+        arena_k = comm_k.arena(local)
+        lay_k = arena_k.layout
+        bufs = [jax.ShapeDtypeStruct((lay_k.segment_of(b).size,),
+                                     jnp.float32)
+                for b in range(lay_k.n_segments)]
+        jx = jax.make_jaxpr(
+            lambda buf, ef, *bs: arena_k.pack_into(buf, list(bs), ef))(
+            arena_k.abstract(), arena_k.ef_abstract(), *bufs)
+        n_kernels = _count_pallas_calls(jx.jaxpr, "_pack_quant_kernel")
+        if n_kernels != lay_k.n_spans:
+            raise AssertionError(
+                f"fused pack+quantize lowered to {n_kernels} pallas calls, "
+                f"expected one per span ({lay_k.n_spans})")
+    compile_s = time.time() - t0
+
+    ratio = meas_f32 / meas_q if meas_q else 0.0
+    if ratio < 3.5:
+        raise AssertionError(
+            f"codec wire-byte ratio {ratio:.3f} < 3.5 "
+            f"(fp32 {meas_f32} B vs {wire_codec} {meas_q} B; page padding "
+            f"too large? use small pages for codec cells)")
+    return {
+        "arch": arch, "suite": "mem", "cell": "codec",
+        "dp_mode": dp_mode,
+        "wire_codec": wire_codec,
+        "codec_block": cplan_q.codec_block,
+        "page_bytes": int(page_bytes),
+        "bucket_mb": bucket_mb,
+        "channels": channels,
+        "transport": "ring",
+        "mesh": "4x1",
+        "devices": n_dev,
+        "compile_s": compile_s,
+        "predicted_wire_bytes_fp32": pred_f32,
+        "hlo_wire_bytes_fp32": meas_f32,
+        "predicted_wire_bytes_codec": pred_q,
+        "hlo_wire_bytes_codec": meas_q,
+        "wire_ratio": ratio,
+        "bytes_match_fp32": abs(meas_f32 - pred_f32) <= 1e-9 * pred_f32,
+        "bytes_match_codec": abs(meas_q - pred_q) <= 1e-9 * pred_q,
+        "pack_quant_kernels": n_kernels,
+        "n_spans_packed": lay_k.n_spans,
+        "codec_tradeoff": cplan_q.codec_tradeoff(),
+        "arena": layout_q.describe() | {"segments": None, "spans": None},
+    }
+
+
 def run_mem_suite(args, cache: dict) -> None:
     """The ``--suite mem`` grid: page_bytes × bucket_mb × arch, each cell
     asserting predicted arena bytes/pages/collective-counts against the
-    lowered HLO with zero tolerance."""
+    lowered HLO with zero tolerance.  With ``--wire-codec`` the grid runs
+    the quantized-wire codec cells instead — per DP mode, each asserting
+    compressed-prediction == lowered bytes at 0 tolerance, a ≥ 3.5×
+    fp32/codec wire ratio, and one fused pack+quantize kernel per span —
+    then asserts the measured ratio is identical across the three modes."""
     archs = (MEM_DEFAULT_ARCHS if args.arch == "all"
              else args.arch.split(","))
     pages = [int(s) for s in str(args.page_bytes).split(",")]
     buckets = [float(s) for s in str(args.bucket_mb).split(",")]
+    if args.wire_codec:
+        run_mem_codec_grid(args, cache, archs, pages, buckets)
+        return
     for arch in archs:
         for pb in pages:
             for bmb in buckets:
@@ -482,6 +671,53 @@ def run_mem_suite(args, cache: dict) -> None:
                     traceback.print_exc()
                 with open(args.out, "w") as f:
                     json.dump(cache, f, indent=1)
+
+
+def run_mem_codec_grid(args, cache: dict, archs, pages, buckets) -> None:
+    """The ``--wire-codec`` arm of the mem suite: one codec cell per
+    (arch × page × bucket × DP mode), plus the cross-mode ratio assert."""
+    for arch in archs:
+        for pb in pages:
+            for bmb in buckets:
+                ratios = {}
+                for dp_mode in ("replicated", "zero1", "fsdp"):
+                    grid = {"page_bytes": pb, "bucket_mb": bmb,
+                            "channels": args.channels,
+                            "wire_codec": args.wire_codec,
+                            "dp_mode": dp_mode}
+                    key = cell_key(args.tag, arch, "mem-codec",
+                                   f"p{pb}-{dp_mode}", grid)
+                    if key in cache and not args.force:
+                        print(f"[cached] {key}")
+                        if "wire_ratio" in cache[key]:
+                            ratios[dp_mode] = cache[key]["wire_ratio"]
+                        continue
+                    print(f"[lower+compile] {key} ...", flush=True)
+                    t0 = time.time()
+                    try:
+                        rec = run_mem_codec_cell(
+                            arch, pb, bmb, channels=args.channels,
+                            dp_mode=dp_mode, wire_codec=args.wire_codec)
+                        rec["tag"] = args.tag
+                        cache[key] = rec
+                        ratios[dp_mode] = rec["wire_ratio"]
+                        print(f"  ok in {time.time()-t0:.1f}s: "
+                              f"wire {rec['hlo_wire_bytes_fp32']:.0f}B -> "
+                              f"{rec['hlo_wire_bytes_codec']:.0f}B "
+                              f"(x{rec['wire_ratio']:.2f}), "
+                              f"{rec['pack_quant_kernels']} fused "
+                              f"pack+quantize kernels", flush=True)
+                    except Exception as e:
+                        cache[key] = {"error": str(e), "tag": args.tag,
+                                      "arch": arch, "shape": "mem-codec"}
+                        print(f"  FAILED: {e}")
+                        traceback.print_exc()
+                    with open(args.out, "w") as f:
+                        json.dump(cache, f, indent=1)
+                if len(ratios) == 3 and len(set(ratios.values())) != 1:
+                    raise AssertionError(
+                        f"codec wire ratio differs across DP modes: "
+                        f"{ratios}")
 
 
 SERVE_DEFAULT_ARCHS = ["llama3.2-1b", "qwen2-7b"]
@@ -847,6 +1083,15 @@ def main() -> None:
     ap.add_argument("--bucket-mb", default="1",
                     help="mem suite: comma-separated bucketer targets in "
                          "MiB")
+    ap.add_argument("--wire-codec", default=None, choices=["int8"],
+                    help="mem suite: run the quantized-wire codec cells "
+                         "instead — per DP mode, asserting compressed "
+                         "prediction == lowered collective bytes at zero "
+                         "tolerance, a >=3.5x fp32/codec wire ratio, and "
+                         "one fused pack+quantize kernel per span (use "
+                         "small --page-bytes, e.g. 4096: 2 MiB pages "
+                         "quantize the int8 payload 4x coarser and the "
+                         "padding eats the ratio)")
     ap.add_argument("--page-tokens", default="8,16",
                     help="serve suite: comma-separated KV page sizes in "
                          "token positions")

@@ -25,13 +25,15 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
-from repro.comm.plan import ALPHA_S, LINK_BANDWIDTH
+from repro.comm.plan import ALPHA_S, HBM_BANDWIDTH, LINK_BANDWIDTH
 
 PEAK_FLOPS = 197e12          # bf16 per chip
-HBM_BW = 819e9               # bytes/s per chip
+HBM_BW = HBM_BANDWIDTH       # bytes/s per chip
 ICI_BW = LINK_BANDWIDTH      # bytes/s per link (one direction); single
                              # source in repro.comm.plan so the roofline and
-                             # LatencyModel β terms can never desync
+                             # LatencyModel β terms can never desync (and
+                             # CommPlan.codec_tradeoff prices pack+quantize
+                             # kernel time against the same HBM number)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

@@ -47,6 +47,10 @@ def main() -> None:
                          "CommArena (fused spans, donated buffer)")
     ap.add_argument("--page-bytes", type=int, default=None,
                     help="arena page size (default 2 MiB)")
+    ap.add_argument("--wire-codec", default=None, choices=["int8"],
+                    help="quantize the gradient wire (int8 payload + "
+                         "per-block scales, error feedback; with "
+                         "--use-arena the fused pack+quantize path)")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 mesh (needs 256 devices)")
     ap.add_argument("--multi-pod", action="store_true")
@@ -82,7 +86,7 @@ def main() -> None:
                           schedule=schedule, total_steps=args.steps),
         microbatches=1 if args.reduced else st.microbatches,
         schedule=args.accum_policy or "accumulate_then_reduce",
-        use_arena=args.use_arena)
+        use_arena=args.use_arena, wire_codec=args.wire_codec)
     trainer = Trainer(model, mesh, step_cfg, data, shape,
                       TrainerConfig(steps=args.steps, ckpt_every=50,
                                     ckpt_dir=args.ckpt_dir, log_every=10))

@@ -8,16 +8,23 @@ donate-every-step pack/unpack with jnp and Pallas flat-copy paths).
 ``Communicator.reduce_scheduled(..., arena=...)`` reduces contiguous arena
 spans instead of bucket pytrees; ``TrainStepConfig.use_arena`` threads it
 through all three DP modes.
+
+Under ``wire_codec='int8'`` the arena is a :class:`QuantArenaLayout` /
+:class:`QuantCommArena` pair: int8 payload + trailing fp32 block scales in
+one donated buffer, packed by the fused pack+quantize kernels with
+error-feedback residuals (:mod:`repro.kernels.pack_quant`).
 """
 
-from repro.mem.arena import CommArena, PACK_IMPLS
+from repro.mem.arena import CommArena, PACK_IMPLS, QuantCommArena
 from repro.mem.layout import (ArenaLayout, ArenaSegment, ArenaSpan,
-                              PAGE_BYTES, arena_from_bucket_plan,
-                              arena_from_halo_plan, fuse_schedule,
-                              plan_arena)
+                              PAGE_BYTES, QuantArenaLayout,
+                              arena_from_bucket_plan, arena_from_halo_plan,
+                              fuse_schedule, plan_arena, plan_quant_arena,
+                              quant_arena_from_bucket_plan)
 
 __all__ = [
     "ArenaLayout", "ArenaSegment", "ArenaSpan", "CommArena", "PACK_IMPLS",
-    "PAGE_BYTES", "arena_from_bucket_plan", "arena_from_halo_plan",
-    "fuse_schedule", "plan_arena",
+    "PAGE_BYTES", "QuantArenaLayout", "QuantCommArena",
+    "arena_from_bucket_plan", "arena_from_halo_plan", "fuse_schedule",
+    "plan_arena", "plan_quant_arena", "quant_arena_from_bucket_plan",
 ]

@@ -30,7 +30,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.mem.layout import ArenaLayout
+from repro.core.topology import padded_size
+from repro.mem.layout import ArenaLayout, QuantArenaLayout
 
 PACK_IMPLS = ("jnp", "pallas")
 
@@ -135,3 +136,158 @@ class CommArena:
                 seg = lay.segment_of(b)
                 out[b] = self._read(buf, seg.offset - sp.offset, seg.size)
         return out
+
+
+@dataclass(frozen=True)
+class QuantCommArena:
+    """The quantized-wire arena: one persistent donated **int8** buffer
+    holding per-block absmax int8 payload plus the trailing fp32 scale
+    segment (:class:`~repro.mem.layout.QuantArenaLayout`).
+
+    Packing *encodes*: :meth:`pack_into` runs the fused pack+quantize
+    kernel per segment — error-feedback compensation applied on the way in,
+    residual emitted on the way out — and :meth:`unpack` /
+    :meth:`dequant_span` run the fused dequant+unpack.  The persistence
+    contract is :class:`CommArena`'s: thread the buffer (and the fp32
+    error-feedback accumulator) through the jitted step donated, so both
+    live in the same allocation step over step.
+    """
+
+    layout: QuantArenaLayout
+    impl: str = "jnp"
+
+    def __post_init__(self):
+        if self.impl not in PACK_IMPLS:
+            raise ValueError(f"impl must be one of {PACK_IMPLS}, "
+                             f"got {self.impl!r}")
+
+    # -- allocation ----------------------------------------------------------
+
+    def zeros(self) -> jax.Array:
+        return jnp.zeros((self.layout.total_elems,), self.layout.dtype)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((self.layout.total_elems,),
+                                    jnp.dtype(self.layout.dtype))
+
+    def ef_zeros(self) -> jax.Array:
+        """A fresh zero error-feedback accumulator — one fp32 residual per
+        payload element, donated alongside the arena."""
+        return jnp.zeros((self.layout.payload_elems,), jnp.float32)
+
+    def ef_abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((self.layout.payload_elems,),
+                                    jnp.float32)
+
+    # -- fused encode / decode (run inside jit / shard_map) ------------------
+
+    def _write_quant(self, arena: jax.Array, src: jax.Array, offset: int):
+        if self.impl == "pallas":
+            from repro.kernels.pack_quant import write_quant_flat
+
+            return write_quant_flat(arena, src, offset,
+                                    self.layout.scale_offset,
+                                    self.layout.block)
+        from repro.kernels.pack_quant import ref
+
+        return ref.write_quant_flat(arena, src, offset,
+                                    self.layout.scale_offset,
+                                    self.layout.block)
+
+    def _read_dequant(self, arena: jax.Array, offset: int, size: int
+                      ) -> jax.Array:
+        if self.impl == "pallas":
+            from repro.kernels.pack_quant import read_dequant_flat
+
+            return read_dequant_flat(arena, offset, size,
+                                     self.layout.scale_offset,
+                                     self.layout.block)
+        from repro.kernels.pack_quant import ref
+
+        return ref.read_dequant_flat(arena, offset, size,
+                                     self.layout.scale_offset,
+                                     self.layout.block)
+
+    def pack_into(self, arena: jax.Array, buffers: Sequence[jax.Array],
+                  ef: jax.Array | None = None):
+        """Quantize ``buffers[i]`` into segment ``i`` + trailing scales.
+
+        When ``ef`` (the flat fp32 error-feedback accumulator) is given,
+        each bucket is compensated with its stored residual before
+        encoding and the accumulator is updated from the fresh
+        quantization residual.  Returns ``(arena, ef)``.
+        """
+        lay = self.layout
+        if len(buffers) != lay.n_segments:
+            raise ValueError(f"arena has {lay.n_segments} segments, got "
+                             f"{len(buffers)} buffers")
+        if arena.shape != (lay.total_elems,):
+            raise ValueError(f"arena shape {arena.shape} != "
+                             f"({lay.total_elems},)")
+        if ef is not None and ef.shape != (lay.payload_elems,):
+            raise ValueError(f"ef shape {ef.shape} != "
+                             f"({lay.payload_elems},)")
+        from jax import lax
+        for seg in lay.segments:
+            b = buffers[seg.bucket].reshape(-1)
+            if b.shape[0] != seg.size:
+                raise ValueError(f"bucket {seg.bucket} has {b.shape[0]} "
+                                 f"elems, segment expects {seg.size}")
+            # encode whole quant blocks: sizes not already block multiples
+            # (e.g. per-shard FSDP units) are zero-extended into the
+            # segment's block-aligned padding
+            bsize = padded_size(seg.size, lay.block)
+            b = b.astype(jnp.float32)
+            if bsize != seg.size:
+                b = jnp.pad(b, (0, bsize - seg.size))
+            if ef is not None:
+                b = b + lax.slice_in_dim(ef, seg.offset, seg.offset + bsize,
+                                         axis=0)
+            arena, residual = self._write_quant(arena, b, seg.offset)
+            if ef is not None:
+                ef = lax.dynamic_update_slice_in_dim(ef, residual,
+                                                     seg.offset, axis=0)
+        return arena, ef
+
+    def pack(self, buffers: Sequence[jax.Array],
+             ef: jax.Array | None = None):
+        return self.pack_into(self.zeros(), buffers, ef)
+
+    def unpack(self, arena: jax.Array) -> list[jax.Array]:
+        """Fused dequant+unpack: fp32 segment payloads, by bucket id."""
+        lay = self.layout
+        if arena.shape != (lay.total_elems,):
+            raise ValueError(f"arena shape {arena.shape} != "
+                             f"({lay.total_elems},)")
+        out: list[jax.Array | None] = [None] * lay.n_segments
+        for seg in lay.segments:
+            bsize = padded_size(seg.size, lay.block)
+            dec = self._read_dequant(arena, seg.offset, bsize)
+            out[seg.bucket] = dec[:seg.size] if bsize != seg.size else dec
+        return out
+
+    # -- span mode (the fused-collective path) -------------------------------
+
+    def dequant_span(self, arena: jax.Array, idx: int) -> jax.Array:
+        """Decode span ``idx``'s payload to fp32 (span sizes are whole
+        quant blocks by layout)."""
+        sp = self.layout.spans[idx]
+        return self._read_dequant(arena, sp.offset, sp.size)
+
+    def requant_span(self, arena: jax.Array, idx: int,
+                     values: jax.Array) -> jax.Array:
+        """Re-encode reduced fp32 ``values`` into span ``idx``'s payload +
+        scales (residual discarded: error feedback compensates the encode
+        of the *local* gradient, not the reduced sum)."""
+        sp = self.layout.spans[idx]
+        if values.shape != (sp.size,):
+            raise ValueError(f"span {idx} expects ({sp.size},), got "
+                             f"{values.shape}")
+        arena, _ = self._write_quant(arena, values, sp.offset)
+        return arena
+
+    def unpack_spans(self, spans: Sequence[jax.Array]) -> list[jax.Array]:
+        """Bucket payloads out of per-span **fp32** buffers (e.g.
+        all-gathered ZeRO deltas) — plain slicing, no codec."""
+        return CommArena(self.layout.payload,
+                         self.impl).unpack_spans(spans)

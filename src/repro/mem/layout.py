@@ -197,6 +197,152 @@ class ArenaLayout:
         }
 
 
+SCALE_BYTES = 4  # one fp32 scale per codec block, bitcast to arena bytes
+
+
+@dataclass(frozen=True)
+class QuantArenaLayout:
+    """Placement of a wire-codec arena: the int8 quantized payload laid out
+    exactly like an fp32 :class:`ArenaLayout` (one elem == one byte), plus
+    one trailing page-quantized **scale segment** holding the per-block
+    fp32 scales bitcast to bytes.  One donated flat int8 buffer carries
+    payload and scales; segments/spans delegate to the payload layout, so
+    every consumer of the fp32 arena (schedule fusing, span norms, shard
+    sizing) works unchanged on element counts.
+
+    Payload offsets and padded sizes are ``block`` multiples (the plan
+    folds the codec block into the pad multiple), so (a) a segment's scale
+    index is ``offset // block`` — segments never share a scale block, an
+    oversized leaf's dedicated segment keeps its own scales — and (b)
+    padding occupies whole quant blocks, confining any stale-byte decode to
+    elements no reader ever consumes.
+    """
+
+    payload: ArenaLayout       # int8 payload placement
+    block: int                 # codec block: payload elements per scale
+
+    # -- payload delegation (element counts == byte counts for int8) ---------
+
+    @property
+    def dtype(self) -> object:
+        return self.payload.dtype
+
+    @property
+    def page_bytes(self) -> int:
+        return self.payload.page_bytes
+
+    @property
+    def quantum(self) -> int:
+        return self.payload.quantum
+
+    @property
+    def segments(self) -> tuple[ArenaSegment, ...]:
+        return self.payload.segments
+
+    @property
+    def spans(self) -> tuple[ArenaSpan, ...]:
+        return self.payload.spans
+
+    @property
+    def n_segments(self) -> int:
+        return self.payload.n_segments
+
+    @property
+    def n_spans(self) -> int:
+        return self.payload.n_spans
+
+    @property
+    def used_elems(self) -> int:
+        return self.payload.used_elems
+
+    @property
+    def padding_elems(self) -> int:
+        return self.payload.padding_elems
+
+    @property
+    def padding_fraction(self) -> float:
+        return self.payload.padding_fraction
+
+    def segment_of(self, bucket: int) -> ArenaSegment:
+        return self.payload.segment_of(bucket)
+
+    def span_of(self, bucket: int) -> ArenaSpan:
+        return self.payload.span_of(bucket)
+
+    # -- the trailing scale segment ------------------------------------------
+
+    @property
+    def payload_elems(self) -> int:
+        return self.payload.total_elems
+
+    @property
+    def n_scales(self) -> int:
+        return self.payload.total_elems // self.block
+
+    @property
+    def scale_offset(self) -> int:
+        """Byte/element offset of the scale segment (page-aligned, since
+        the payload total is quantum-aligned)."""
+        return self.payload.total_elems
+
+    @property
+    def scale_region_bytes(self) -> int:
+        return padded_size(max(self.n_scales * SCALE_BYTES, 1),
+                           self.page_bytes)
+
+    @property
+    def total_elems(self) -> int:
+        return self.scale_offset + self.scale_region_bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return self.total_elems  # int8
+
+    @property
+    def n_pages(self) -> int:
+        return -(-self.total_bytes // self.page_bytes)
+
+    def scale_byte_range(self, offset: int, size: int) -> tuple[int, int]:
+        """Arena byte range of the scales covering payload
+        ``[offset : offset + size]``."""
+        lo = self.scale_offset + (offset // self.block) * SCALE_BYTES
+        return lo, lo + (size // self.block) * SCALE_BYTES
+
+    # -- wire accounting -----------------------------------------------------
+
+    @property
+    def wire_bytes_per_elem(self) -> float:
+        """Bytes one payload element costs on the wire: the int8 value plus
+        its amortized share of the block scale."""
+        return 1.0 + SCALE_BYTES / self.block
+
+    def validate(self) -> None:
+        self.payload.validate()
+        if jnp.dtype(self.payload.dtype) != jnp.int8:
+            raise ValueError(f"quant arena payload must be int8, got "
+                             f"{self.payload.dtype}")
+        if self.block <= 0:
+            raise ValueError(f"block must be positive, got {self.block}")
+        for s in self.segments:
+            if s.offset % self.block or s.padded % self.block:
+                raise ValueError(f"segment {s.bucket}: offset/padded not a "
+                                 f"multiple of codec block {self.block}")
+
+    def describe(self) -> dict:
+        return self.payload.describe() | {
+            "codec": "int8",
+            "codec_block": self.block,
+            "payload_elems": self.payload_elems,
+            "n_scales": self.n_scales,
+            "scale_offset": self.scale_offset,
+            "scale_region_bytes": self.scale_region_bytes,
+            "total_elems": self.total_elems,
+            "total_bytes": self.total_bytes,
+            "n_pages": self.n_pages,
+            "wire_bytes_per_elem": self.wire_bytes_per_elem,
+        }
+
+
 # emit the oversized-bucket warning once per process, not once per plan
 _warned_oversized = False
 
@@ -291,6 +437,47 @@ def arena_from_bucket_plan(plan: BucketPlan, *,
                       pad_multiple=max(pad_multiple, plan.pad_multiple),
                       bucket_bytes=bucket_bytes,
                       warn_oversized=warn_oversized)
+
+
+def plan_quant_arena(sizes: Sequence[int], *, page_bytes: int = PAGE_BYTES,
+                     block: int = 512,
+                     channel_of: Sequence[int] | None = None,
+                     pad_multiple: int = 1, bucket_bytes: int | None = None,
+                     warn_oversized: bool = True) -> QuantArenaLayout:
+    """Quantized-wire variant of :func:`plan_arena`: ``sizes`` are fp32
+    *value* counts, placed as int8 payload with the codec ``block`` folded
+    into the pad multiple (so segment offsets/padded sizes hold whole quant
+    blocks) and a trailing page-quantized scale segment appended."""
+    if block <= 0:
+        raise ValueError(f"block must be positive, got {block}")
+    pad = math.lcm(int(pad_multiple), int(block))
+    # sizes count fp32 gradient values; scale the oversized threshold to
+    # the int8 itemsize so the warning fires for the same leaves as fp32
+    bb = None if bucket_bytes is None else max(1, int(bucket_bytes) // 4)
+    payload = plan_arena(sizes, page_bytes=page_bytes, dtype=jnp.int8,
+                         channel_of=channel_of, pad_multiple=pad,
+                         bucket_bytes=bb, warn_oversized=warn_oversized)
+    layout = QuantArenaLayout(payload=payload, block=int(block))
+    layout.validate()
+    return layout
+
+
+def quant_arena_from_bucket_plan(plan: BucketPlan, *,
+                                 page_bytes: int = PAGE_BYTES,
+                                 block: int = 512,
+                                 channel_of: Sequence[int] | None = None,
+                                 pad_multiple: int = 1,
+                                 bucket_bytes: int | None = None,
+                                 warn_oversized: bool = True
+                                 ) -> QuantArenaLayout:
+    """Quantized arena layout for a bucket plan: one int8 segment per
+    bucket plus the trailing scale segment."""
+    return plan_quant_arena(plan.bucket_sizes, page_bytes=page_bytes,
+                            block=block, channel_of=channel_of,
+                            pad_multiple=max(pad_multiple,
+                                             plan.pad_multiple),
+                            bucket_bytes=bucket_bytes,
+                            warn_oversized=warn_oversized)
 
 
 def arena_from_halo_plan(halo_plan, *, page_bytes: int = PAGE_BYTES,

@@ -39,6 +39,14 @@ registration).  ``replicated`` all-reduces fused contiguous spans (fewer,
 larger, aligned messages); ``zero1`` reduce-scatters span shards; ``fsdp``
 uses the arena as its microbatch accumulation buffer (its reduction rides
 the gather transpose, so only buffer residency changes).
+
+``wire_codec='int8'`` makes the wire quantized: with ``use_arena`` the
+arena leaf becomes the int8 payload + fp32-scale buffer written by the
+fused pack+quantize kernels (:mod:`repro.kernels.pack_quant`) and the
+train state grows an ``"ef"`` leaf — the per-element error-feedback
+residual, compensated into every encode so the quantization error
+telescopes instead of accumulating.  Without the arena it falls back to
+the legacy per-hop ring codec (the old ``ring_compressed`` transport).
 """
 
 from __future__ import annotations
@@ -57,8 +65,9 @@ from repro.comm import CommConfig, Communicator
 from repro.comm.schedule import CommSchedule, SCHEDULE_POLICIES, build_schedule
 from repro.core.bucketing import BucketPlan
 from repro.core.reducer import ReduceConfig
-from repro.mem.arena import CommArena
-from repro.mem.layout import ArenaLayout, plan_arena
+from repro.mem.arena import CommArena, QuantCommArena
+from repro.mem.layout import (ArenaLayout, QuantArenaLayout, plan_arena,
+                              plan_quant_arena)
 from repro.models.model_api import Model
 from repro.models.parallel import ParallelCtx
 from repro.optim import (OptimConfig, adamw_flat_update, adamw_tree_update,
@@ -80,6 +89,11 @@ class TrainStepConfig:
     schedule: str = "accumulate_then_reduce"  # SCHEDULE_POLICIES member
     use_arena: bool = False            # repro.mem CommArena (page-aligned,
                                        # donated, fused-span collectives)
+    wire_codec: str | None = None      # None | "int8": quantized wire; with
+                                       # use_arena the arena is the int8
+                                       # payload + scale buffer and the train
+                                       # state carries the error-feedback
+                                       # accumulator ("ef" leaf)
     causal_skip: bool = False
     gather_dtype: str = "bfloat16"     # fsdp weight-gather wire dtype
     fsdp_bucket_bytes: int = 512 * 2**20
@@ -90,6 +104,18 @@ class TrainStepConfig:
         """The communicator config for this step: ``comm`` when given,
         otherwise the legacy ``reduce`` policy mapped onto a transport."""
         ccfg = self.comm if self.comm is not None else self.reduce.comm_config()
+        if self.wire_codec is not None:
+            ccfg = replace(ccfg, wire_codec=self.wire_codec)
+        if (ccfg.wire_codec is not None and self.dp_mode == "fsdp"
+                and self.fsdp_gather == "ring"):
+            # the codec encode (round/clip) has zero gradient, so the
+            # unrolled ring gather's autodiff transpose — which IS the
+            # fsdp reduction — would silently drop it
+            raise ValueError(
+                "wire_codec is incompatible with fsdp_gather='ring' "
+                "(the reduction rides the gather transpose and the "
+                "codec has no useful gradient); use fsdp_gather="
+                "'native'")
         return replace(ccfg, data_axes=data_axes)
 
     @property
@@ -263,15 +289,21 @@ class FsdpPlan:
         self.plans = {name: self.bucketer.plan(tree)
                       for name, tree in self.groups.items()}
         # arena accumulation buffer: one segment per group-bucket *shard*,
-        # in grads-tree leaf order (dicts flatten key-sorted)
-        self.arena_layout: ArenaLayout | None = None
+        # in grads-tree leaf order (dicts flatten key-sorted); quantized
+        # (int8 payload + scales + error feedback) under wire_codec
+        self.arena_layout: ArenaLayout | QuantArenaLayout | None = None
         if cfg.use_arena:
             shard_sizes = [n // max(self.dp_world, 1)
                            for name in sorted(self.plans)
                            for n in self.plans[name].bucket_sizes]
-            self.arena_layout = plan_arena(
-                shard_sizes, page_bytes=self.comm.cfg.page_bytes,
-                dtype=jnp.float32)
+            if self.comm.codec is not None:
+                self.arena_layout = plan_quant_arena(
+                    shard_sizes, page_bytes=self.comm.cfg.page_bytes,
+                    block=self.comm.cfg.codec_block)
+            else:
+                self.arena_layout = plan_arena(
+                    shard_sizes, page_bytes=self.comm.cfg.page_bytes,
+                    dtype=jnp.float32)
         # static norm-accounting weights per group (model-replication aware)
         msize = _sizes(mesh).get("model", 1)
         self.norm_weights = {}
@@ -366,8 +398,29 @@ def init_train_state(model: Model, mesh: Mesh, cfg: TrainStepConfig,
 
     # use_arena: the persistent page-aligned comm buffer lives in the state
     # (one flat leaf, donated with the rest), so every step reuses the same
-    # allocation — the paper's allocate-once registration
+    # allocation — the paper's allocate-once registration.  Under
+    # wire_codec='int8' the arena leaf is the int8 payload+scale buffer and
+    # an fp32 "ef" leaf carries the error-feedback residuals; both donated,
+    # both restored by path (ckpt.restore keeps the fresh zeros when a
+    # checkpoint written without them is loaded).
     arena_elems = 0
+    arena_dtype = jnp.float32
+    ef_elems = 0
+
+    def _arena_leaves(state):
+        state["arena"] = jnp.zeros((arena_elems,), arena_dtype)
+        if ef_elems:
+            state["ef"] = jnp.zeros((ef_elems,), jnp.float32)
+        return state
+
+    def _arena_specs(specs, layout):
+        nonlocal arena_elems, arena_dtype, ef_elems
+        arena_elems = layout.total_elems
+        arena_dtype = jnp.dtype(layout.dtype)
+        specs["arena"] = flat
+        if isinstance(layout, QuantArenaLayout):
+            ef_elems = layout.payload_elems
+            specs["ef"] = flat
 
     if cfg.dp_mode == "replicated":
         specs = {"params": pspecs, "opt": {"mu": pspecs, "nu": pspecs},
@@ -375,16 +428,13 @@ def init_train_state(model: Model, mesh: Mesh, cfg: TrainStepConfig,
         if cfg.use_arena:
             comm = build_comm(mesh, cfg)
             local = _local_shapes(model.abstract_params(), pspecs, mesh)
-            arena_elems = comm.arena_layout(local).total_elems
-            specs["arena"] = flat
+            _arena_specs(specs, comm.arena_layout(local))
 
         def mk(k):
             p_local = _slice_to_local(model.init(k), pspecs)
             state = {"params": p_local, "opt": init_opt_state(p_local),
                      "step": jnp.zeros((), jnp.int32)}
-            if cfg.use_arena:
-                state["arena"] = jnp.zeros((arena_elems,), jnp.float32)
-            return state
+            return _arena_leaves(state) if cfg.use_arena else state
 
     elif cfg.dp_mode == "zero1":
         comm = build_comm(mesh, cfg)
@@ -393,7 +443,6 @@ def init_train_state(model: Model, mesh: Mesh, cfg: TrainStepConfig,
         if cfg.use_arena:
             # optimizer shards follow the fused-span layout, not the buckets
             layout = comm.arena_layout(local)
-            arena_elems = layout.total_elems
             shard_sizes = [sp.size // comm.world for sp in layout.spans]
         else:
             shard_sizes = [n // comm.world for n in plan.bucket_sizes]
@@ -402,16 +451,14 @@ def init_train_state(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                          "nu": [flat] * len(shard_sizes)},
                  "step": P()}
         if cfg.use_arena:
-            specs["arena"] = flat
+            _arena_specs(specs, layout)
 
         def mk(k):
             p_local = _slice_to_local(model.init(k), pspecs)
             zeros = lambda: [jnp.zeros((n,), jnp.float32) for n in shard_sizes]
             state = {"params": p_local, "opt": {"mu": zeros(), "nu": zeros()},
                      "step": jnp.zeros((), jnp.int32)}
-            if cfg.use_arena:
-                state["arena"] = jnp.zeros((arena_elems,), jnp.float32)
-            return state
+            return _arena_leaves(state) if cfg.use_arena else state
 
     elif cfg.dp_mode == "fsdp":
         plan = FsdpPlan(model, mesh, cfg)
@@ -421,8 +468,7 @@ def init_train_state(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                  "opt": {"mu": spec_groups, "nu": spec_groups},
                  "step": P()}
         if cfg.use_arena:
-            arena_elems = plan.arena_layout.total_elems
-            specs["arena"] = flat
+            _arena_specs(specs, plan.arena_layout)
 
         def mk(k):
             p_local = _slice_to_local(model.init(k), pspecs)
@@ -431,9 +477,7 @@ def init_train_state(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                 lambda s: jnp.zeros_like(s, jnp.float32), groups)
             state = {"groups": groups, "opt": {"mu": zeros(), "nu": zeros()},
                      "step": jnp.zeros((), jnp.int32)}
-            if cfg.use_arena:
-                state["arena"] = jnp.zeros((arena_elems,), jnp.float32)
-            return state
+            return _arena_leaves(state) if cfg.use_arena else state
 
     else:
         raise ValueError(f"dp_mode must be one of {DP_MODES}")
@@ -536,8 +580,15 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                 return loss, g
 
             new_arena = None
+            new_ef = None
+            quant = isinstance(comm_arena, QuantCommArena)
             if cfg.dp_mode == "replicated":
-                if comm_arena is not None:
+                if quant:
+                    loss, (grads, new_arena, new_ef) = comm.reduce_scheduled(
+                        grad_fn, state["params"], batch, comm_sched,
+                        op="all_reduce", arena=comm_arena,
+                        arena_buf=state["arena"], ef_buf=state["ef"])
+                elif comm_arena is not None:
                     loss, (grads, new_arena) = comm.reduce_scheduled(
                         grad_fn, state["params"], batch, comm_sched,
                         op="all_reduce", arena=comm_arena,
@@ -557,7 +608,13 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                              "step": state["step"] + 1}
             else:  # zero1: buckets reduce-scatter as their microbatch's
                    # backward finishes (streamed ZeRO); shards accumulate
-                if comm_arena is not None:
+                if quant:
+                    loss, (shards, plan, new_arena, new_ef) = (
+                        comm.reduce_scheduled(
+                            grad_fn, state["params"], batch, comm_sched,
+                            op="reduce_scatter", arena=comm_arena,
+                            arena_buf=state["arena"], ef_buf=state["ef"]))
+                elif comm_arena is not None:
                     loss, (shards, plan, new_arena) = comm.reduce_scheduled(
                         grad_fn, state["params"], batch, comm_sched,
                         op="reduce_scatter", arena=comm_arena,
@@ -595,6 +652,8 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                              "step": state["step"] + 1}
             if new_arena is not None:
                 new_state["arena"] = new_arena
+            if new_ef is not None:
+                new_state["ef"] = new_ef
             metrics = {"loss": ctx.pmean_data(loss), "grad_norm": gnorm,
                        "lr": lr}
             return new_state, metrics
@@ -605,11 +664,13 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
         # reduction rides the autodiff transpose of the per-layer gather, so
         # streaming in readiness order is intrinsic; the schedule records it
         comm_sched = _fsdp_schedule(plan, cfg.microbatches)
-        fsdp_arena = (CommArena(plan.arena_layout,
-                                impl="pallas"
-                                if plan.comm.cfg.local_op == "pallas"
-                                else "jnp")
-                      if cfg.use_arena else None)
+        fsdp_impl = ("pallas" if plan.comm.cfg.local_op == "pallas"
+                     else "jnp")
+        fsdp_arena = None
+        if cfg.use_arena:
+            fsdp_arena = (QuantCommArena(plan.arena_layout, impl=fsdp_impl)
+                          if isinstance(plan.arena_layout, QuantArenaLayout)
+                          else CommArena(plan.arena_layout, impl=fsdp_impl))
 
         def step_fn(state, batch):
             def gfn(groups, mb):
@@ -623,7 +684,15 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                 return jax.value_and_grad(gfn)(groups, mb)
 
             new_arena = None
-            if fsdp_arena is not None:
+            new_ef = None
+            if isinstance(fsdp_arena, QuantCommArena):
+                # quantized accumulation buffer: pack+quantize with error
+                # feedback once per step, fused dequant+unpack out
+                loss, (grads, new_arena, new_ef) = plan.comm.reduce_scheduled(
+                    grad_fn, state["groups"], batch, comm_sched, op="none",
+                    arena=fsdp_arena, arena_buf=state["arena"],
+                    ef_buf=state["ef"])
+            elif fsdp_arena is not None:
                 # the arena is the microbatch accumulation buffer (grads
                 # arrive pre-sharded via the gather transpose)
                 loss, (grads, new_arena) = plan.comm.reduce_scheduled(
@@ -663,6 +732,8 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                          "step": state["step"] + 1}
             if new_arena is not None:
                 new_state["arena"] = new_arena
+            if new_ef is not None:
+                new_state["ef"] = new_ef
             metrics = {"loss": ctx.pmean_data(loss), "grad_norm": gnorm,
                        "lr": lr}
             return new_state, metrics

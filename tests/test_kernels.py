@@ -7,6 +7,8 @@ import pytest
 
 from repro.kernels.flash_attn import ops as fa_ops
 from repro.kernels.flash_attn import ref as fa_ref
+from repro.kernels.pack_quant import ops as pq_ops
+from repro.kernels.pack_quant import ref as pq_ref
 from repro.kernels.quant import ops as q_ops
 from repro.kernels.quant import ref as q_ref
 from repro.kernels.reduce_add import ops as ra_ops
@@ -44,12 +46,86 @@ def test_quant_matches_ref(n, block, rng):
     assert np.all(np.abs(np.asarray(back) - np.asarray(x)) <= bound)
 
 
+@pytest.mark.parametrize("n,block", [
+    (960, 96),      # block not a multiple of 128 lanes
+    (192, 96),      # ... and a tiny block count
+    (640, 320),     # lane-misaligned block, several blocks
+])
+def test_quant_misaligned_is_the_oracle(n, block, rng):
+    """Shapes off the (32, 128) int8 tiling take the fallback, which IS the
+    jnp oracle — q/scales/decode are bitwise identical, never approximate
+    (``kernels.pack``'s fallback-is-the-oracle contract)."""
+    x = jnp.asarray(rng.randn(n).astype(np.float32) * 3.0)
+    q, s = q_ops.quantize(x, block)
+    q2, s2 = q_ref.quantize_blocks(np.asarray(x).reshape(-1, block))
+    np.testing.assert_array_equal(np.asarray(q).reshape(-1, block),
+                                  np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s2).reshape(-1))
+    back = q_ops.dequantize(q, s, block)
+    wback = q_ref.dequantize_blocks(np.asarray(q).reshape(-1, block),
+                                    np.asarray(s).reshape(-1, 1))
+    np.testing.assert_array_equal(np.asarray(back),
+                                  np.asarray(wback).reshape(-1))
+
+
 def test_quant_zero_block_safe():
     x = jnp.zeros((1024,), jnp.float32)
     q, s = q_ops.quantize(x, 256, interpret=True)
     assert np.all(np.asarray(q) == 0)
     back = q_ops.dequantize(q, s, 256, interpret=True)
     assert np.all(np.asarray(back) == 0)
+
+
+@pytest.mark.parametrize("n,offset,block", [(2048, 512, 512), (4096, 0, 512),
+                                            (1024, 2048, 256),
+                                            (3072, 1024, 1024)])
+def test_pack_quant_matches_ref(n, offset, block, rng):
+    """Fused pack+quantize (aligned fast path) vs the jnp oracle: int8
+    payload exact, scales to 1 ulp, fused dequant recovers the oracle's
+    decode."""
+    payload, total = 8192, 8192 + 128
+    arena = jnp.zeros((total,), jnp.int8)
+    x = jnp.asarray(rng.randn(n).astype(np.float32) * 3.0)
+    x = x.at[:block].set(0.0)                     # zero block stays safe
+    out, res = pq_ops.write_quant_flat(arena, x, offset, payload, block,
+                                       interpret=True)
+    want, wres = pq_ref.write_quant_flat(arena, x, offset, payload, block)
+    np.testing.assert_array_equal(
+        np.asarray(out[offset:offset + n]), np.asarray(want[offset:offset + n]))
+    s = pq_ref.read_scales_flat(out, offset, n, payload, block)
+    s2 = pq_ref.read_scales_flat(want, offset, n, payload, block)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s2), rtol=1e-7)
+    np.testing.assert_allclose(np.asarray(res), np.asarray(wres),
+                               rtol=1e-5, atol=1e-6)
+    back = pq_ops.read_dequant_flat(out, offset, n, payload, block,
+                                    interpret=True)
+    wback = pq_ref.read_dequant_flat(want, offset, n, payload, block)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(wback),
+                               rtol=1e-6, atol=1e-7)
+    # absmax block quantisation error bound: scale/2 per element
+    bound = np.repeat(np.asarray(s), block) * 0.5 + 1e-8
+    assert np.all(np.abs(np.asarray(back) - np.asarray(x)) <= bound)
+
+
+@pytest.mark.parametrize("n,offset,block", [
+    (1024, 256, 512),     # offset not a block multiple
+    (960, 0, 96),         # block not lane-aligned
+    (512, 0, 512),        # arena length not lane-aligned (total=4196+...)
+])
+def test_pack_quant_misaligned_is_the_oracle(n, offset, block, rng):
+    """Shapes off the (32, 128) int8 tiling take the fallback, which IS the
+    jnp oracle — outputs are bitwise identical, never approximately so."""
+    payload = 4096
+    total = payload + 100 if n == 512 else payload + 128
+    arena = jnp.zeros((total,), jnp.int8)
+    x = jnp.asarray(rng.randn(n).astype(np.float32) * 3.0)
+    out, res = pq_ops.write_quant_flat(arena, x, offset, payload, block)
+    want, wres = pq_ref.write_quant_flat(arena, x, offset, payload, block)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(wres))
+    back = pq_ops.read_dequant_flat(out, offset, n, payload, block)
+    wback = pq_ref.read_dequant_flat(want, offset, n, payload, block)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(wback))
 
 
 @pytest.mark.parametrize("sq,sk,hq,hkv,d", [

@@ -343,3 +343,111 @@ def test_kv_allocator_conservation(n_pages, seed, rounds):
     got = a.alloc(1)
     with pytest.raises(ValueError):
         a.free(got + got)
+
+
+# ---------------------------------------------------------------------------
+# quantized wire: fused arena pack+quantize + error feedback (PR 7)
+# ---------------------------------------------------------------------------
+
+
+@given_or_grid(
+    "n_blocks,block,mag,seed",
+    [(1, 512, 1.0, 0), (3, 512, 1e-3, 1), (8, 1024, 1e3, 2),
+     (2, 256, 37.0, 3)],
+    lambda: dict(n_blocks=st.integers(1, 8),
+                 block=st.sampled_from([256, 512, 1024]),
+                 mag=st.floats(1e-3, 1e3), seed=st.integers(0, 2**16)))
+def test_quant_arena_blockwise_error_bound(n_blocks, block, mag, seed):
+    """pack -> unpack error is elementwise <= scale/2 with the scale of the
+    element's *own* block (scale = max(blockwise absmax / 127, tiny))."""
+    from repro.mem import QuantCommArena, plan_quant_arena
+
+    n = n_blocks * block
+    lay = plan_quant_arena([n], page_bytes=4096, block=block)
+    arena = QuantCommArena(lay)
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(n).astype(np.float32) * mag)
+    buf, _ = arena.pack([x])
+    back = np.asarray(arena.unpack(buf)[0])
+    absmax = np.abs(np.asarray(x)).reshape(n_blocks, block).max(1)
+    scale = np.maximum(absmax / 127.0, np.finfo(np.float32).tiny)
+    bound = np.repeat(scale / 2.0 * (1 + 1e-5), block)
+    assert np.all(np.abs(back - np.asarray(x)) <= bound)
+
+
+@given_or_grid(
+    "n_blocks,mag,seed,steps",
+    [(2, 1.0, 0, 1), (4, 1e2, 1, 3), (1, 1e-2, 2, 2), (6, 5.0, 3, 4)],
+    lambda: dict(n_blocks=st.integers(1, 6), mag=st.floats(1e-2, 1e2),
+                 seed=st.integers(0, 2**16), steps=st.integers(1, 4)))
+def test_quant_arena_ef_residual_conservation(n_blocks, mag, seed, steps):
+    """The error-feedback accumulator is *exactly* the unrepresented part:
+    after every pack, ``new_ef == (x + old_ef) - decode(arena)`` bitwise
+    (decode returns the very fp32 product the residual was computed from),
+    so no gradient mass is silently dropped across steps."""
+    from repro.mem import QuantCommArena, plan_quant_arena
+
+    block = 512
+    n = n_blocks * block
+    lay = plan_quant_arena([n], page_bytes=4096, block=block)
+    arena = QuantCommArena(lay)
+    rng = np.random.RandomState(seed)
+    buf, ef = arena.zeros(), arena.ef_zeros()
+    for _ in range(steps):
+        x = jnp.asarray(rng.randn(n).astype(np.float32) * mag)
+        comp = np.asarray(x + ef[:n])           # what pack_into encodes
+        buf, ef = arena.pack_into(buf, [x], ef)
+        decoded = np.asarray(arena.unpack(buf)[0])
+        np.testing.assert_array_equal(
+            np.asarray(ef)[:n], (comp - decoded).astype(np.float32))
+        # conservation: decoded + residual recovers the compensated
+        # gradient to one rounding of the subtraction
+        np.testing.assert_allclose(decoded + np.asarray(ef)[:n], comp,
+                                   rtol=1e-6, atol=1e-6 * mag)
+
+
+@given_or_grid(
+    "n_leaves,base_blocks,spread,seed",
+    [(2, 2, 1e6, 0), (3, 1, 1e4, 1), (4, 3, 1e2, 2), (2, 4, 1e8, 3)],
+    lambda: dict(n_leaves=st.integers(2, 4), base_blocks=st.integers(1, 4),
+                 spread=st.sampled_from([1e2, 1e4, 1e6]),
+                 seed=st.integers(0, 2**16)))
+def test_quant_arena_oversized_leaves_keep_own_scales(n_leaves, base_blocks,
+                                                      spread, seed):
+    """Oversized leaves (bigger than the bucket target) get dedicated
+    block-aligned segments, so a huge-magnitude neighbour never inflates a
+    tiny leaf's quantization scales: each leaf's error stays bounded by its
+    *own* blockwise absmax."""
+    from repro.core.bucketing import GradientBucketer
+    from repro.mem import QuantCommArena, quant_arena_from_bucket_plan
+
+    block = 512
+    sizes = [(base_blocks + i) * block for i in range(n_leaves)]
+    mags = [spread if i % 2 == 0 else 1.0 for i in range(n_leaves)]
+    rng = np.random.RandomState(seed)
+    tree = {f"p{i}": jnp.asarray(rng.randn(n).astype(np.float32) * m)
+            for i, (n, m) in enumerate(zip(sizes, mags))}
+    bucket_bytes = 2 * block                     # every leaf is oversized
+    b = GradientBucketer(bucket_bytes=bucket_bytes, pad_multiple=block)
+    buckets, plan = b.bucketize(tree)
+    assert plan.n_buckets == n_leaves            # never split, never merged
+    lay = quant_arena_from_bucket_plan(plan, page_bytes=4096, block=block,
+                                       bucket_bytes=bucket_bytes,
+                                       warn_oversized=False)
+    # dedicated segments start on block boundaries: scale blocks disjoint
+    assert all(seg.offset % block == 0 for seg in lay.segments)
+    ranges = sorted((seg.offset, seg.offset + seg.padded)
+                    for seg in lay.segments)
+    assert all(a_end <= b_start
+               for (_, a_end), (b_start, _) in zip(ranges, ranges[1:]))
+    arena = QuantCommArena(lay)
+    buf, _ = arena.pack(buckets)
+    back = b.debucketize(arena.unpack(buf), plan)
+    for i, k in enumerate(tree):
+        x = np.asarray(tree[k])
+        nb = -(-x.size // block)
+        xb = np.pad(x, (0, nb * block - x.size)).reshape(nb, block)
+        scale = np.maximum(np.abs(xb).max(1) / 127.0,
+                           np.finfo(np.float32).tiny)
+        bound = np.repeat(scale / 2.0 * (1 + 1e-5), block)[:x.size]
+        assert np.all(np.abs(np.asarray(back[k]) - x) <= bound), k
