@@ -9,6 +9,7 @@ wire is a memcpy; wire-level effects live in the dry-run roofline instead
 
 from __future__ import annotations
 
+import inspect
 import os
 import subprocess
 import sys
@@ -28,11 +29,37 @@ def run_on_devices(script: str, n_devices: int = 8, timeout: int = 1200) -> str:
     return proc.stdout
 
 
-TIMER_SNIPPET = r"""
-import time
-import jax
+class Timing(float):
+    """Median seconds that still *is* a float (every bench call site keeps
+    working), carrying the dispersion the tuner's fitter weights by."""
+
+    t_min: float
+    t_max: float
+    samples: tuple
+
+    def __new__(cls, samples):
+        ts = sorted(float(t) for t in samples)
+        mid = len(ts) // 2
+        # true median: mean of the middle pair for even sample counts
+        # (ts[len//2] alone is the *upper* median — biased high)
+        med = ts[mid] if len(ts) % 2 else 0.5 * (ts[mid - 1] + ts[mid])
+        self = super().__new__(cls, med)
+        self.t_min = ts[0]
+        self.t_max = ts[-1]
+        self.samples = tuple(ts)
+        return self
+
+    @property
+    def spread(self):
+        return self.t_max - self.t_min
+
 
 def time_call(fn, *args, warmup=1, iters=3):
+    """Median wall-seconds of ``iters`` blocked calls, as a :class:`Timing`."""
+    import time
+
+    import jax
+
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -40,6 +67,10 @@ def time_call(fn, *args, warmup=1, iters=3):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    ts.sort()
-    return ts[len(ts)//2]  # median seconds
-"""
+    return Timing(ts)
+
+
+# the same implementation, embedded verbatim in bench subprocess scripts —
+# one source of truth for module importers and TIMER_SNIPPET consumers
+TIMER_SNIPPET = "\n" + inspect.getsource(Timing) + "\n" + \
+    inspect.getsource(time_call) + "\n"

@@ -57,6 +57,18 @@ class LatencyModel:
     def collective_seconds(self, messages: float, nbytes: float) -> float:
         return self.alpha_s * float(messages) + float(nbytes) / self.bandwidth
 
+    @classmethod
+    def from_record(cls, record) -> "LatencyModel":
+        """Measured constants from a tuning-DB record (or a bare fit dict /
+        :class:`repro.tune.fit.FitResult`): what ``dryrun --tuned`` prices
+        cells with instead of the hardcoded guesses above."""
+        if hasattr(record, "alpha_s"):          # FitResult (duck-typed)
+            return cls(alpha_s=float(record.alpha_s),
+                       bandwidth=float(record.bandwidth))
+        fit = record.get("fit", record)         # DB record or raw fit dict
+        return cls(alpha_s=float(fit["alpha_s"]),
+                   bandwidth=float(fit["bandwidth"]))
+
 
 @dataclass(frozen=True)
 class ChannelAssignment:

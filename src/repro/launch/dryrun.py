@@ -42,19 +42,36 @@ from repro.runtime.train_step import (TrainStepConfig, build_step_schedule,
 
 HBM_PER_CHIP = 16 * 2**30
 
+# canonical implementation lives in repro.tune.db (jax-free, shared with the
+# tuning-DB keys); re-exported here because this is where cache-key users
+# have always imported it from.  Folded into the cache key by
+# :func:`cell_key` so that re-running with a different ``--accum-policy`` /
+# schedule / solver override can never be served a stale cached cell.
+from repro.tune.db import overrides_fingerprint  # noqa: E402  (re-export)
 
-def overrides_fingerprint(overrides: dict | None) -> str:
-    """Deterministic, order-insensitive fingerprint of a cell's overrides.
 
-    Folded into the cache key by :func:`cell_key` so that re-running with a
-    different ``--accum-policy`` / schedule / solver override can never be
-    served a stale cached cell (the key used to be ``tag|arch|shape|mesh``
-    only, which silently ignored override changes)."""
-    if not overrides:
-        return ""
-    items = sorted((str(k), json.dumps(v, sort_keys=True, default=str))
-                   for k, v in overrides.items())
-    return ",".join(f"{k}={v}" for k, v in items)
+def _tuned_pricing(db, *, arch: str, mesh_label: str, transport: str,
+                   channels: int | None = None,
+                   page_bytes: int | None = None) -> dict | None:
+    """Measured pricing for one dry-run cell from a tuning DB.
+
+    Returns ``None`` when no record matches the cell's transport (fitted
+    constants never transfer across schedules); otherwise a dict with the
+    rebuilt :class:`~repro.comm.plan.LatencyModel`, the winning record's
+    key, and the ``model_error`` block (the fit's predicted-vs-measured
+    residuals) the cell record surfaces."""
+    from repro.comm.plan import LatencyModel
+    from repro.tune.db import model_error_summary
+
+    hit = db.lookup(transport=transport, arch=arch, mesh=mesh_label,
+                    channels=channels, page_bytes=page_bytes)
+    if hit is None:
+        return None
+    key, rec = hit
+    model = LatencyModel.from_record(rec)
+    return {"model": model, "key": key,
+            "alpha_s": model.alpha_s, "bandwidth": model.bandwidth,
+            "model_error": model_error_summary(rec)}
 
 
 def cell_key(tag: str, arch: str, shape: str, mesh_label: str,
@@ -202,7 +219,7 @@ def _model_size(mesh) -> int:
 
 
 def analyse(lowered, n_dev: int, model, shape_cfg,
-            overlap_fraction: float = 0.0) -> dict:
+            overlap_fraction: float = 0.0, latency=None) -> dict:
     t0 = time.time()
     compiled = lowered.compile()
     compile_s = time.time() - t0
@@ -217,7 +234,7 @@ def analyse(lowered, n_dev: int, model, shape_cfg,
                                        if shape_cfg.kind != "decode" else 1)
     n_active = model.active_param_count()
     mf = model_flops_estimate(n_active, tokens, shape_cfg.kind)
-    roof = Roofline(
+    roof_kw = dict(
         flops_per_device=float(ca.get("flops", 0.0)),
         hbm_bytes_per_device=float(ca.get("bytes accessed", 0.0)),
         wire_bytes_per_device=stats.wire_bytes,
@@ -225,6 +242,9 @@ def analyse(lowered, n_dev: int, model, shape_cfg,
         overlap_fraction=overlap_fraction,
         messages_per_device=stats.messages,
     )
+    # --tuned: price the collective term with measured α/bandwidth
+    roof = (Roofline.from_latency(latency, **roof_kw) if latency is not None
+            else Roofline(**roof_kw))
     mem = {
         "argument_gb": ma.argument_size_in_bytes / 2**30,
         "output_gb": ma.output_size_in_bytes / 2**30,
@@ -249,9 +269,10 @@ def analyse(lowered, n_dev: int, model, shape_cfg,
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             overrides: dict | None = None) -> dict:
+             overrides: dict | None = None, tuned_db=None) -> dict:
     lowered, n_dev, model, shape_cfg = lower_cell(arch, shape_name, multi_pod,
                                                   overrides)
+    mesh_label = "2x16x16" if multi_pod else "16x16"
     sched = None
     if shape_cfg.kind == "train":
         # the issue schedule the step executes: its overlap fraction makes
@@ -260,14 +281,28 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         tcfg = make_step_config(arch, overrides)
         with mesh:
             sched = build_step_schedule(model, mesh, tcfg)
+    pricing = None
+    if tuned_db is not None:
+        if shape_cfg.kind == "train":
+            tr, ch = tcfg.comm.transport, tcfg.comm.channels
+        else:
+            st = settings_for(arch)
+            tr, ch = st.transport, st.channels
+        pricing = _tuned_pricing(tuned_db, arch=arch, mesh_label=mesh_label,
+                                 transport=tr, channels=ch)
     out = analyse(lowered, n_dev, model, shape_cfg,
-                  overlap_fraction=sched.overlap_fraction if sched else 0.0)
+                  overlap_fraction=sched.overlap_fraction if sched else 0.0,
+                  latency=pricing["model"] if pricing else None)
     if shape_cfg.kind == "train":
         with mesh:
             out["comm_plan"] = comm_plan_summary(model, mesh, tcfg)
         out["schedule"] = sched.describe()
+    if pricing:
+        out["tuned"] = {"key": pricing["key"], "alpha_s": pricing["alpha_s"],
+                        "bandwidth": pricing["bandwidth"]}
+        out["model_error"] = pricing["model_error"]
     out.update({"arch": arch, "shape": shape_name,
-                "mesh": "2x16x16" if multi_pod else "16x16",
+                "mesh": mesh_label,
                 "devices": n_dev})
     return out
 
@@ -298,7 +333,8 @@ def _entry_param_elems(hlo_text: str, index: int, dtype: str = "f32"
 
 
 def run_mem_cell(arch: str, page_bytes: int, bucket_mb: float, *,
-                 channels: int = 2, transport: str = "psum") -> dict:
+                 channels: int = 2, transport: str = "psum",
+                 tuned_db=None) -> dict:
     """One ``--suite mem`` cell: lower + compile a pack→reduce→unpack step
     over the arch's (reduced) gradient tree with a **donated** arena, then
     hold the :mod:`repro.mem` prediction layer to the optimized HLO with
@@ -408,15 +444,27 @@ def run_mem_cell(arch: str, page_bytes: int, bucket_mb: float, *,
         raise AssertionError(
             f"arena wire bytes: predicted {predicted}, HLO {measured}")
 
+    pricing = None
+    if tuned_db is not None:
+        pricing = _tuned_pricing(tuned_db, arch=arch, mesh_label="4x1",
+                                 transport=transport, channels=channels,
+                                 page_bytes=int(page_bytes))
     padding_wire = predicted * layout.padding_fraction
-    roof = Roofline(
+    roof_kw = dict(
         flops_per_device=0.0, hbm_bytes_per_device=0.0,
         wire_bytes_per_device=predicted - padding_wire,
         padding_wire_bytes_per_device=padding_wire,
         messages_per_device=cplan.arena_messages_per_device,
         overlap_fraction=sched_arena.overlap_fraction,
     )
-    return {
+    roof = (Roofline.from_latency(pricing["model"], **roof_kw)
+            if pricing else Roofline(**roof_kw))
+    tuned_extra = ({"tuned": {"key": pricing["key"],
+                              "alpha_s": pricing["alpha_s"],
+                              "bandwidth": pricing["bandwidth"]},
+                    "model_error": pricing["model_error"]}
+                   if pricing else {})
+    return tuned_extra | {
         "arch": arch, "suite": "mem",
         "page_bytes": int(page_bytes),
         "bucket_mb": bucket_mb,
@@ -626,7 +674,7 @@ def run_mem_codec_cell(arch: str, page_bytes: int, bucket_mb: float, *,
     }
 
 
-def run_mem_suite(args, cache: dict) -> None:
+def run_mem_suite(args, cache: dict, tuned_db=None) -> None:
     """The ``--suite mem`` grid: page_bytes × bucket_mb × arch, each cell
     asserting predicted arena bytes/pages/collective-counts against the
     lowered HLO with zero tolerance.  With ``--wire-codec`` the grid runs
@@ -646,6 +694,10 @@ def run_mem_suite(args, cache: dict) -> None:
             for bmb in buckets:
                 grid = {"page_bytes": pb, "bucket_mb": bmb,
                         "channels": args.channels}
+                if tuned_db is not None:
+                    # tuned pricing is part of the cell identity: an
+                    # untuned cached cell must not shadow a --tuned run
+                    grid["tuned"] = os.path.basename(args.tuned)
                 key = cell_key(args.tag, arch, "mem", f"p{pb}", grid)
                 if key in cache and not args.force:
                     print(f"[cached] {key}")
@@ -654,7 +706,8 @@ def run_mem_suite(args, cache: dict) -> None:
                 t0 = time.time()
                 try:
                     rec = run_mem_cell(arch, pb, bmb,
-                                       channels=args.channels)
+                                       channels=args.channels,
+                                       tuned_db=tuned_db)
                     rec["tag"] = args.tag
                     cache[key] = rec
                     print(f"  ok in {time.time()-t0:.1f}s: "
@@ -1052,6 +1105,12 @@ def main() -> None:
     ap.add_argument("--out", default="experiments/dryrun.json")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--tuned", default=None, metavar="DB",
+                    help="tuning DB (repro.tune.probe output): price each "
+                         "train/mem cell's collective roofline term with "
+                         "the *measured* α/bandwidth of the closest fitted "
+                         "record and attach the fit's predicted-vs-measured "
+                         "residuals as the cell's model_error field")
     ap.add_argument("--microbatches", type=int, default=1,
                     help="grad-accum slices for train cells; the dry-run "
                          "default of 1 keeps unrolled-HLO compile times "
@@ -1127,6 +1186,13 @@ def main() -> None:
     archs = list_archs() if args.arch == "all" else args.arch.split(",")
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
 
+    tuned_db = None
+    if args.tuned:
+        from repro.tune.db import TuningDB
+
+        tuned_db = TuningDB.load(args.tuned)
+        print(f"[tuned] {args.tuned}: {len(tuned_db)} fitted record(s)")
+
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     cache: dict = {}
     if os.path.exists(args.out):
@@ -1137,7 +1203,7 @@ def main() -> None:
         if args.suite == "stencil":
             run_stencil_suite(args, meshes, cache)
         elif args.suite == "mem":
-            run_mem_suite(args, cache)
+            run_mem_suite(args, cache, tuned_db=tuned_db)
         else:
             run_serve_suite(args, cache)
         n_ok = sum(1 for v in cache.values() if "error" not in v)
@@ -1157,8 +1223,13 @@ def main() -> None:
             for multi in meshes:
                 overrides = {"accum_microbatches": args.microbatches,
                              "accum_policy": args.accum_policy}
+                key_over = dict(overrides)
+                if tuned_db is not None:
+                    # tuned pricing is part of the cell identity (key only:
+                    # make_step_config must not see the marker)
+                    key_over["tuned"] = os.path.basename(args.tuned)
                 key = cell_key(args.tag, arch, shape_name,
-                               "multi" if multi else "single", overrides)
+                               "multi" if multi else "single", key_over)
                 if key in cache and not args.force:
                     print(f"[cached] {key}")
                     continue
@@ -1166,7 +1237,7 @@ def main() -> None:
                 t0 = time.time()
                 try:
                     rec = run_cell(arch, shape_name, multi,
-                                   overrides=overrides)
+                                   overrides=overrides, tuned_db=tuned_db)
                     rec["tag"] = args.tag
                     cache[key] = rec
                     r = rec["roofline"]

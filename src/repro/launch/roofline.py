@@ -154,6 +154,18 @@ class Roofline:
                                     # rides the fused collectives: wasted
                                     # but *real* wire bytes (repro.mem)
     alpha_s: float = ALPHA_S
+    link_bandwidth: float = ICI_BW  # β term; a tuning-DB record replaces
+                                    # both constants with *measured* ones
+                                    # (see Roofline.from_latency)
+
+    @classmethod
+    def from_latency(cls, model, **kw) -> "Roofline":
+        """Roofline whose α/β constants come from a
+        :class:`~repro.comm.plan.LatencyModel` — typically one rebuilt
+        from a tuning-DB record (``LatencyModel.from_record``) so the cell
+        is priced with measured rather than guessed constants."""
+        return cls(alpha_s=model.alpha_s, link_bandwidth=model.bandwidth,
+                   **kw)
 
     @property
     def t_compute(self) -> float:
@@ -170,7 +182,8 @@ class Roofline:
         across the wire, so the prediction charges for it."""
         return (self.alpha_s * self.messages_per_device
                 + (self.wire_bytes_per_device
-                   + self.padding_wire_bytes_per_device) / ICI_BW)
+                   + self.padding_wire_bytes_per_device)
+                / self.link_bandwidth)
 
     @property
     def t_exposed_collective(self) -> float:
@@ -217,6 +230,8 @@ class Roofline:
             "messages_per_device": self.messages_per_device,
             "padding_wire_bytes_per_device":
                 self.padding_wire_bytes_per_device,
+            "alpha_s": self.alpha_s,
+            "link_bandwidth": self.link_bandwidth,
             "t_compute_s": self.t_compute,
             "t_memory_s": self.t_memory,
             "t_collective_s": self.t_collective,

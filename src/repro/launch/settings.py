@@ -23,20 +23,40 @@ class ArchSettings:
     dp_mode: str            # replicated | zero1 | fsdp
     microbatches: int       # grad-accumulation slices for train_4k
     serve_weights: str      # resident | gathered
-    transport: str = "ring_hier"   # registered repro.comm transport
-    channels: int = 0       # virtual comm rails (0 = scheduler-unconstrained)
+    transport: str = "ring_hier"   # registered repro.comm transport, or
+                                   # "auto": measured best from the tuning DB
+    channels: int = 0       # virtual comm rails (0 = scheduler-unconstrained;
+                            # also the tuner's soft "resolve me" sentinel)
     wire_codec: str | None = None  # None | "int8": quantized gradient wire
                                    # (fused arena pack+quantize + error
                                    # feedback; ~3.9x fewer collective bytes)
+    page_bytes: int | str = 2 * 2**20  # arena granule (paper's huge page),
+                                       # or "auto": from the tuning DB
 
     def comm_config(self, *, chunks: int = 2,
                     bucket_bytes: int = 256 * 2**20,
-                    page_bytes: int = 2 * 2**20) -> CommConfig:
-        """The architecture's production communicator config
-        (``page_bytes``: arena granule, the paper's 2 MiB huge page)."""
-        return CommConfig(transport=self.transport, channels=self.channels,
+                    page_bytes: int | None = None) -> CommConfig:
+        """The architecture's production communicator config.
+
+        Unresolved ``"auto"`` sentinels (the caller skipped
+        :func:`repro.tune.resolve.resolve_settings`) fall back to today's
+        defaults with a warning rather than crashing the launch."""
+        transport, pb = self.transport, (self.page_bytes if page_bytes is None
+                                         else page_bytes)
+        if transport == "auto" or pb == "auto":
+            import warnings
+
+            from repro.tune.resolve import (FALLBACK_PAGE_BYTES,
+                                            FALLBACK_TRANSPORT)
+            warnings.warn(
+                "comm_config() called with unresolved 'auto' settings; "
+                "resolve via repro.tune.resolve.resolve_settings (or pass "
+                "--tuned to the launcher) — using defaults", stacklevel=2)
+            transport = FALLBACK_TRANSPORT if transport == "auto" else transport
+            pb = FALLBACK_PAGE_BYTES if pb == "auto" else pb
+        return CommConfig(transport=transport, channels=self.channels,
                           chunks=chunks, bucket_bytes=bucket_bytes,
-                          page_bytes=page_bytes,
+                          page_bytes=int(pb),
                           wire_codec=self.wire_codec)
 
 
@@ -60,4 +80,24 @@ SETTINGS: dict[str, ArchSettings] = {
 
 
 def settings_for(arch: str) -> ArchSettings:
-    return SETTINGS[arch]
+    """Lookup; unknown arch names the full menu instead of a bare KeyError
+    (every CLI entry point funnels through here)."""
+    try:
+        return SETTINGS[arch]
+    except KeyError:
+        raise ValueError(
+            f"unknown arch {arch!r}; known archs: "
+            f"{', '.join(sorted(SETTINGS))}") from None
+
+
+def resolve_settings_for(arch: str, *, mesh_label: str | None = None,
+                         db_path: str | None = None
+                         ) -> tuple[ArchSettings, dict]:
+    """:func:`settings_for` plus tuning-DB resolution of any ``"auto"``
+    sentinels (see :mod:`repro.tune.resolve`); returns ``(settings,
+    info)`` where ``info['source']`` says whether a measured record was
+    used.  Settings with no sentinels pass through untouched."""
+    from repro.tune.resolve import resolve_settings
+
+    return resolve_settings(settings_for(arch), arch, mesh_label=mesh_label,
+                            db_path=db_path)

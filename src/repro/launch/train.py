@@ -20,6 +20,7 @@ from repro.configs.base import ShapeConfig
 from repro.data import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.settings import settings_for
+from repro.tune import resolve
 from repro.models import build_model
 from repro.optim import OptimConfig
 from repro.runtime.train_loop import Trainer, TrainerConfig
@@ -56,6 +57,10 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--tuned", default=None, metavar="DB",
+                    help="tuning DB (repro.tune.probe output): resolve the "
+                         "arch's 'auto' comm knobs — and any channels=0 — "
+                         "to the DB's measured-best config before launch")
     args = ap.parse_args()
 
     st = settings_for(args.arch)
@@ -63,6 +68,17 @@ def main() -> None:
     model = build_model(cfg)
     mesh = (make_production_mesh(multi_pod=args.multi_pod)
             if args.production_mesh else make_host_mesh())
+    mesh_label = "x".join(str(d) for d in mesh.devices.shape)
+    if args.tuned or resolve.has_auto(st):
+        st, info = resolve.resolve_settings(st, args.arch,
+                                            mesh_label=mesh_label,
+                                            db_path=args.tuned)
+        if info["source"] == "db":
+            print(f"tuned: {info['key']} "
+                  f"(alpha={info['alpha_s']*1e6:.2f}us "
+                  f"bw={info['bandwidth']/1e9:.2f}GB/s) -> "
+                  f"transport={st.transport} channels={st.channels} "
+                  f"page_bytes={st.page_bytes}")
     print(f"arch={args.arch} params={model.param_count()/1e6:.1f}M "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 

@@ -18,6 +18,7 @@ the FT tests via simulated failures.
 from __future__ import annotations
 
 import os
+import statistics
 import time
 from dataclasses import dataclass, field
 
@@ -26,21 +27,36 @@ import jax
 
 @dataclass
 class StragglerMonitor:
+    """EWMA straggler detector.
+
+    The first ``warmup_steps`` samples only *collect*: the EWMA is seeded
+    from their **median**, not from the first step — step 0 is the compile
+    step, typically 10-1000x a steady-state step, and seeding from it
+    inflates the baseline so early real stragglers sail under
+    ``threshold × ewma`` unflagged.  Warmup samples never emit events.
+    """
+
     threshold: float = 2.0
     decay: float = 0.9
     warmup_steps: int = 3
     _ewma: float | None = None
     _steps: int = 0
+    _warmup: list = field(default_factory=list)
     events: list = field(default_factory=list)
 
     def record(self, step: int, seconds: float) -> bool:
         """Returns True when this step is flagged as a straggler."""
         self._steps += 1
-        if self._ewma is None:
+        if self._steps <= self.warmup_steps:
+            # warmup: collect only — no baseline yet, no events
+            self._warmup.append(seconds)
+            if self._steps == self.warmup_steps:
+                self._ewma = statistics.median(self._warmup)
+            return False
+        if self._ewma is None:   # warmup_steps == 0: seed from first sample
             self._ewma = seconds
             return False
-        flagged = (self._steps > self.warmup_steps
-                   and seconds > self.threshold * self._ewma)
+        flagged = seconds > self.threshold * self._ewma
         if flagged:
             self.events.append((step, seconds, self._ewma))
         else:

@@ -1,0 +1,38 @@
+"""repro.tune — measured auto-tuner for the communication substrate.
+
+The paper's methodology is *measured*: the authors benchmarked their way to
+the dual-HFI / multi-endpoint / huge-page configuration rather than
+predicting it.  This package closes the same loop over our stack:
+
+* :mod:`repro.tune.probe` drives the existing benches (allreduce, arena,
+  halo, cg) as a calibration matrix over transport × channels × page_bytes
+  × message size, reusing the subprocess harness in ``benchmarks/common.py``;
+* :mod:`repro.tune.fit` least-squares the measured timings against
+  ``t = α·messages + bytes/bandwidth`` per transport, recovering *measured*
+  α and bandwidth with per-cell predicted-vs-measured errors (so
+  regressions in the latency *model* become visible, not just in the code);
+* :mod:`repro.tune.db` persists the fits as a JSON tuning database keyed
+  like the dry-run cache (arch × mesh × transport × channels × page_bytes,
+  overrides fingerprint folded in);
+* :mod:`repro.tune.resolve` turns ``"auto"`` knobs in
+  :class:`repro.launch.settings.ArchSettings` into the DB's measured best
+  config at launch, falling back to today's defaults with a warning when
+  no entry matches.
+
+``python -m repro.tune.probe --out experiments/tuning.json`` builds the DB;
+``python -m repro.launch.dryrun --tuned experiments/tuning.json`` then
+prices every dry-run cell with the measured constants and reports the
+per-cell ``model_error``.
+"""
+
+from repro.tune.db import (DEFAULT_DB_PATH, TuningDB, overrides_fingerprint,
+                           tune_key)
+from repro.tune.fit import FitResult, fit_cells, fit_latency
+from repro.tune.probe import ProbeCell, group_cells, synthesize_cells
+from repro.tune.resolve import resolve_settings
+
+__all__ = [
+    "DEFAULT_DB_PATH", "FitResult", "ProbeCell", "TuningDB", "fit_cells",
+    "fit_latency", "group_cells", "overrides_fingerprint",
+    "resolve_settings", "synthesize_cells", "tune_key",
+]

@@ -1,0 +1,144 @@
+"""Least-squares calibration of the α/β latency model from probe timings.
+
+One fit per (transport × channels × page_bytes) probe group, over the
+message-size sweep:
+
+    t_i = α · messages_i + bytes_i / bandwidth
+
+is linear in ``(α, β=1/bandwidth)``, so a weighted two-column least squares
+recovers the *measured* per-message launch latency and per-link bandwidth
+that :class:`repro.comm.plan.LatencyModel` hardcodes as guesses.  The fit
+also returns per-cell predicted-vs-measured relative errors — the number
+``dryrun --tuned`` surfaces as ``model_error`` — so a regression in the
+*model* (a transport whose hop count prediction drifts from what it lowers
+to) is as visible as a regression in the code.
+
+Cells carry their timing dispersion (min/max of the timed iterations, see
+``benchmarks/common.time_call``); noisy cells are down-weighted by
+``1/σ²`` with ``σ = max(spread/2, rel_floor·t)`` so one scheduling hiccup
+cannot drag the fitted constants.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Sequence
+
+import numpy as np
+
+# β is clamped to this floor instead of zero/negative so ``bandwidth`` stays
+# finite and JSON-serialisable (1e15 B/s ≈ infinitely fast: the β term
+# contributes nothing measurable at probe sizes).
+_MAX_BANDWIDTH = 1e15
+# relative timing-noise floor: even a zero-spread cell is assumed good to
+# no better than 1% of its own value
+_REL_FLOOR = 0.01
+
+
+@dataclass(frozen=True)
+class FitResult:
+    """Measured α/bandwidth plus the fit-quality record.
+
+    ``rel_errors[i]`` is ``|t_pred − t_meas| / t_meas`` for probe cell
+    ``i`` under the *fitted* constants; ``max_rel_err``/``mean_rel_err``
+    summarise them.  These travel with the tuning-DB record and become the
+    per-cell ``model_error`` of ``dryrun --tuned``.
+    """
+
+    alpha_s: float              # measured per-message launch latency
+    bandwidth: float            # measured per-link bytes/s
+    n_cells: int
+    rel_errors: tuple[float, ...]
+    mean_rel_err: float
+    max_rel_err: float
+    rms_residual_s: float
+
+    def predicted_seconds(self, messages: float, nbytes: float) -> float:
+        return self.alpha_s * float(messages) + float(nbytes) / self.bandwidth
+
+    def as_dict(self) -> dict:
+        return {
+            "alpha_s": self.alpha_s,
+            "bandwidth": self.bandwidth,
+            "n_cells": self.n_cells,
+            "rel_errors": list(self.rel_errors),
+            "mean_rel_err": self.mean_rel_err,
+            "max_rel_err": self.max_rel_err,
+            "rms_residual_s": self.rms_residual_s,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FitResult":
+        return cls(alpha_s=float(d["alpha_s"]),
+                   bandwidth=float(d["bandwidth"]),
+                   n_cells=int(d["n_cells"]),
+                   rel_errors=tuple(float(e) for e in d["rel_errors"]),
+                   mean_rel_err=float(d["mean_rel_err"]),
+                   max_rel_err=float(d["max_rel_err"]),
+                   rms_residual_s=float(d["rms_residual_s"]))
+
+
+def dispersion_weight(seconds: float, t_min: float, t_max: float,
+                      rel_floor: float = _REL_FLOOR) -> float:
+    """``1/σ²`` weight from a cell's timing spread (min/max over iters)."""
+    sigma = max((float(t_max) - float(t_min)) / 2.0,
+                rel_floor * abs(float(seconds)), 1e-12)
+    return 1.0 / (sigma * sigma)
+
+
+def fit_latency(samples: Sequence[tuple[float, float, float, float]]
+                ) -> FitResult:
+    """Weighted least squares of ``t = α·m + b/bw``.
+
+    ``samples``: iterable of ``(messages, nbytes, seconds, weight)``.
+    Coefficients are clamped to the physical octant (α ≥ 0, bandwidth ≤
+    1e15 B/s); a clamped coordinate triggers a one-parameter refit of the
+    other so the constants stay least-squares optimal on the boundary.
+    """
+    rows = [(float(m), float(b), float(t), float(w))
+            for m, b, t, w in samples]
+    if not rows:
+        raise ValueError("fit_latency needs at least one probe sample")
+    m = np.array([r[0] for r in rows])
+    b = np.array([r[1] for r in rows])
+    t = np.array([r[2] for r in rows])
+    sw = np.sqrt(np.array([r[3] for r in rows]))
+
+    A = np.stack([m * sw, b * sw], axis=1)
+    y = t * sw
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    alpha, beta = float(coef[0]), float(coef[1])
+
+    def _refit_single(col: np.ndarray) -> float:
+        denom = float(np.dot(col * sw, col * sw))
+        return float(np.dot(col * sw, y)) / denom if denom > 0 else 0.0
+
+    if alpha < 0.0:
+        alpha = 0.0
+        beta = _refit_single(b)
+    if beta < 1.0 / _MAX_BANDWIDTH:
+        beta = 1.0 / _MAX_BANDWIDTH
+        if np.any(m > 0):
+            alpha = max(_refit_single(m), 0.0)
+    bandwidth = 1.0 / beta
+
+    pred = alpha * m + beta * b
+    resid = pred - t
+    denom = np.where(np.abs(t) > 0, np.abs(t), 1.0)
+    rel = np.abs(resid) / denom
+    return FitResult(
+        alpha_s=alpha, bandwidth=bandwidth, n_cells=len(rows),
+        rel_errors=tuple(float(e) for e in rel),
+        mean_rel_err=float(np.mean(rel)),
+        max_rel_err=float(np.max(rel)),
+        rms_residual_s=float(np.sqrt(np.mean(resid * resid))),
+    )
+
+
+def fit_cells(cells: Iterable) -> FitResult:
+    """Fit one group of :class:`repro.tune.probe.ProbeCell` records,
+    weighting by each cell's measured dispersion."""
+    samples = [(c.messages, c.nbytes, c.seconds,
+                dispersion_weight(c.seconds, c.t_min, c.t_max))
+               for c in cells]
+    return fit_latency(samples)

@@ -1,0 +1,340 @@
+"""repro.tune: the measured auto-tuner — fit recovery, DB keying, "auto"
+resolution — plus regression tests for the three bugfixes that shipped with
+it (``settings_for`` error, StragglerMonitor warmup seeding, ``time_call``
+median/dispersion)."""
+
+import json
+import math
+import subprocess
+import sys
+import warnings
+
+import pytest
+
+from repro.comm.plan import ALPHA_S, LINK_BANDWIDTH, LatencyModel
+from repro.launch.settings import ArchSettings, settings_for
+from repro.tune import (FitResult, TuningDB, fit_cells, fit_latency,
+                        overrides_fingerprint, resolve_settings,
+                        synthesize_cells, tune_key)
+from repro.tune.fit import dispersion_weight
+from repro.tune.probe import ProbeCell, group_cells, parse_cells
+
+PLANT_ALPHA = 3.2e-6
+PLANT_BW = 37.5e9
+
+
+# ---------------------------------------------------------------------------
+# fitter
+# ---------------------------------------------------------------------------
+
+
+def test_fit_recovers_planted_constants_under_one_percent():
+    """The acceptance criterion: synthetic timings with known α/bandwidth
+    come back to <1% relative error."""
+    cells = synthesize_cells(
+        transports=("ring_hier", "psum"), channels=(1, 2),
+        pages=(4096, 2 * 2**20), sizes=(1 << 12, 1 << 16, 1 << 20),
+        alpha_s=PLANT_ALPHA, bandwidth=PLANT_BW)
+    groups = group_cells(cells)
+    assert len(groups) == 2 * 2 * 2
+    for key, group in groups.items():
+        fit = fit_cells(group)
+        assert abs(fit.alpha_s - PLANT_ALPHA) / PLANT_ALPHA < 0.01, key
+        assert abs(fit.bandwidth - PLANT_BW) / PLANT_BW < 0.01, key
+        assert fit.max_rel_err < 0.01, key
+
+
+def test_fit_latency_varying_messages():
+    """With message counts varying across samples (multi-bucket probes),
+    both coefficients are identifiable from noise-free data."""
+    samples = [(m, b, PLANT_ALPHA * m + b / PLANT_BW, 1.0)
+               for m, b in [(14, 1e6), (28, 2e6), (56, 8e6), (112, 3.2e7)]]
+    fit = fit_latency(samples)
+    assert abs(fit.alpha_s - PLANT_ALPHA) / PLANT_ALPHA < 1e-6
+    assert abs(fit.bandwidth - PLANT_BW) / PLANT_BW < 1e-6
+    assert fit.rms_residual_s < 1e-12
+
+
+def test_fit_weights_down_noisy_cells():
+    """A wildly dispersed outlier cell must not drag the constants: its
+    1/σ² weight collapses."""
+    good = [(14.0, float(b), PLANT_ALPHA * 14 + b / PLANT_BW, 1e12)
+            for b in (1e6, 4e6, 1.6e7, 6.4e7)]
+    # outlier measured 100x too slow, but with spread as large as itself
+    b_out = 2.56e8
+    t_true = PLANT_ALPHA * 14 + b_out / PLANT_BW
+    noisy_w = dispersion_weight(100 * t_true, 0.5 * t_true, 200 * t_true)
+    fit = fit_latency(good + [(14.0, b_out, 100 * t_true, noisy_w)])
+    assert abs(fit.bandwidth - PLANT_BW) / PLANT_BW < 0.05
+    # equal weights for comparison: the outlier wins and wrecks the fit
+    fit_flat = fit_latency([(m, b, t, 1.0) for m, b, t, _ in good]
+                           + [(14.0, b_out, 100 * t_true, 1.0)])
+    assert abs(fit_flat.bandwidth - PLANT_BW) / PLANT_BW > 0.5
+
+
+def test_fit_clamps_to_physical_octant():
+    # pure-bandwidth data pulls α negative-ish under noise; clamp holds 0
+    samples = [(1.0, b, b / PLANT_BW, 1.0) for b in (1e6, 2e6, 4e6)]
+    fit = fit_latency(samples)
+    assert fit.alpha_s >= 0.0
+    assert fit.bandwidth > 0.0 and math.isfinite(fit.bandwidth)
+
+
+def test_fit_result_round_trips_through_json():
+    fit = fit_cells(synthesize_cells(alpha_s=PLANT_ALPHA, bandwidth=PLANT_BW))
+    back = FitResult.from_dict(json.loads(json.dumps(fit.as_dict())))
+    assert back == fit
+
+
+# ---------------------------------------------------------------------------
+# tuning DB
+# ---------------------------------------------------------------------------
+
+
+def test_tune_key_stable_under_override_reordering():
+    a = tune_key("llama3.2-1b", "2x4", "ring_hier", 2, 4096,
+                 {"x": 1, "y": "z"})
+    b = tune_key("llama3.2-1b", "2x4", "ring_hier", 2, 4096,
+                 {"y": "z", "x": 1})
+    assert a == b
+    assert overrides_fingerprint({"x": 1, "y": "z"}) == \
+        overrides_fingerprint({"y": "z", "x": 1})
+    # and the fingerprint is shared with the dry-run cache keying
+    assert tune_key("a", "m", "t", 1, 4096) == "tune|a|m|t|ch1|p4096"
+
+
+def test_db_round_trip_and_lookup(tmp_path):
+    cells = synthesize_cells(transports=("psum", "ring_hier"),
+                             alpha_s=PLANT_ALPHA, bandwidth=PLANT_BW)
+    db = TuningDB()
+    for (tr, ch, page), group in group_cells(cells).items():
+        db.put_fit(arch="generic", mesh="2x4", transport=tr, channels=ch,
+                   page_bytes=page, fit=fit_cells(group), cells=group)
+    path = str(tmp_path / "tuning.json")
+    db.save(path)
+    back = TuningDB.load(path)
+    assert back.records == db.records
+    # save -> load -> save is byte-stable (sorted keys, fixed layout)
+    back.save(str(tmp_path / "tuning2.json"))
+    assert (tmp_path / "tuning.json").read_text() == \
+        (tmp_path / "tuning2.json").read_text()
+
+    # transport is a hard lookup requirement; soft dims degrade gracefully
+    hit = back.lookup(transport="psum", arch="other-arch", mesh="16x16")
+    assert hit is not None and hit[1]["transport"] == "psum"
+    assert back.lookup(transport="no_such_transport") is None
+    # rebuild measured constants from the stored record
+    lm = LatencyModel.from_record(hit[1])
+    assert abs(lm.alpha_s - PLANT_ALPHA) / PLANT_ALPHA < 0.01
+    assert abs(lm.bandwidth - PLANT_BW) / PLANT_BW < 0.01
+
+
+def test_db_best_config_prefers_cheaper_fit():
+    slow = fit_latency([(14, b, 100e-6 * 14 + b / 1e9, 1.0)
+                        for b in (1e6, 4e6)])
+    fast = fit_latency([(14, b, 1e-6 * 14 + b / 100e9, 1.0)
+                        for b in (1e6, 4e6)])
+    mk = lambda tr, ch, elems: [ProbeCell(       # noqa: E731
+        bench="synthetic", arch="generic", mesh="2x4", transport=tr,
+        channels=ch, page_bytes=4096, elems=elems, messages=14.0,
+        nbytes=elems * 4.0, seconds=1.0, t_min=1.0, t_max=1.0)]
+    db = TuningDB()
+    db.put_fit(arch="generic", mesh="2x4", transport="ring", channels=1,
+               page_bytes=4096, fit=slow, cells=mk("ring", 1, 1 << 16))
+    db.put_fit(arch="generic", mesh="2x4", transport="ring_hier", channels=4,
+               page_bytes=4096, fit=fast, cells=mk("ring_hier", 4, 1 << 16))
+    best = db.best_config(arch="generic", mesh="2x4")
+    assert best["transport"] == "ring_hier" and best["channels"] == 4
+    # pinning the transport restricts the candidates
+    pinned = db.best_config(arch="generic", mesh="2x4", transport="ring")
+    assert pinned["transport"] == "ring"
+
+
+# ---------------------------------------------------------------------------
+# "auto" resolution
+# ---------------------------------------------------------------------------
+
+
+def _db_with_record(transport="psum", channels=2, page_bytes=4096):
+    cells = synthesize_cells(transports=(transport,), channels=(channels,),
+                             pages=(page_bytes,), alpha_s=PLANT_ALPHA,
+                             bandwidth=PLANT_BW)
+    db = TuningDB()
+    db.put_fit(arch="generic", mesh="2x4", transport=transport,
+               channels=channels, page_bytes=page_bytes,
+               fit=fit_cells(cells), cells=cells)
+    return db
+
+
+def test_resolve_auto_from_db():
+    st = ArchSettings("replicated", 1, "resident", transport="auto",
+                      page_bytes="auto")
+    resolved, info = resolve_settings(st, "llama3.2-1b", mesh_label="2x4",
+                                      db=_db_with_record())
+    assert info["source"] == "db"
+    assert resolved.transport == "psum"
+    assert resolved.channels == 2          # channels=0 upgraded (soft)
+    assert resolved.page_bytes == 4096
+    # non-sentinel settings pass through untouched
+    pinned = ArchSettings("replicated", 1, "resident", transport="ring",
+                          channels=1)
+    same, info2 = resolve_settings(pinned, "x", db=_db_with_record())
+    assert same == pinned and info2["source"] == "unchanged"
+
+
+def test_resolve_falls_back_with_warning_on_empty_db():
+    st = ArchSettings("replicated", 1, "resident", transport="auto",
+                      page_bytes="auto")
+    with pytest.warns(UserWarning, match="no tuning-DB record"):
+        resolved, info = resolve_settings(st, "llama3.2-1b", db=TuningDB())
+    assert info["source"] == "fallback"
+    assert resolved.transport == "ring_hier"       # today's default
+    assert resolved.page_bytes == 2 * 2**20
+    assert resolved.channels == 0                  # soft sentinel: stays
+
+
+def test_resolve_soft_channels_stays_silent_without_db():
+    # channels=0 alone must not warn (it is a valid production setting)
+    st = ArchSettings("replicated", 1, "resident")   # channels=0 default
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        resolved, info = resolve_settings(st, "llama3.2-1b", db=TuningDB())
+    assert resolved.channels == 0 and info["source"] == "fallback"
+
+
+def test_comm_config_warns_and_defaults_on_unresolved_auto():
+    st = ArchSettings("replicated", 1, "resident", transport="auto",
+                      page_bytes="auto")
+    with pytest.warns(UserWarning, match="unresolved 'auto'"):
+        ccfg = st.comm_config()
+    assert ccfg.transport == "ring_hier" and ccfg.page_bytes == 2 * 2**20
+    # resolved settings build without noise
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ccfg2 = ArchSettings("replicated", 1, "resident",
+                             page_bytes=4096).comm_config()
+    assert ccfg2.page_bytes == 4096
+
+
+# ---------------------------------------------------------------------------
+# probe plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_probe_cell_round_trip_and_parse():
+    cells = synthesize_cells()
+    line = "CELL " + json.dumps(cells[0].as_dict())
+    parsed = parse_cells("noise\n" + line + "\nmore noise\n")
+    assert parsed == [cells[0]]
+
+
+def test_probe_dry_cli_writes_consumable_db(tmp_path):
+    """The CI smoke in miniature: probe --dry -> 2 cells -> DB file whose
+    record carries the planted constants."""
+    out = str(tmp_path / "tuning.json")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.tune.probe", "--dry", "--out", out,
+         "--plant-alpha", str(PLANT_ALPHA), "--plant-bandwidth",
+         str(PLANT_BW)],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "probed 2 cells -> 1 fit group(s)" in r.stdout
+    db = TuningDB.load(out)
+    assert len(db) == 1
+    (key,) = db.records
+    fit = db.fit_for(key)
+    assert abs(fit.alpha_s - PLANT_ALPHA) / PLANT_ALPHA < 0.01
+    assert abs(fit.bandwidth - PLANT_BW) / PLANT_BW < 0.01
+    assert fit.max_rel_err < 0.01
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+
+
+def test_settings_for_unknown_arch_raises_value_error_with_menu():
+    with pytest.raises(ValueError, match="unknown arch 'not-an-arch'"):
+        settings_for("not-an-arch")
+    with pytest.raises(ValueError, match="llama3.2-1b"):
+        settings_for("not-an-arch")
+    # no bare KeyError escapes
+    try:
+        settings_for("nope")
+    except ValueError:
+        pass
+
+
+def test_straggler_monitor_seeds_from_warmup_median():
+    """Regression: the EWMA used to seed from step 0 — the compile step —
+    inflating the baseline so early stragglers passed unflagged."""
+    from repro.runtime.ft import StragglerMonitor
+
+    mon = StragglerMonitor(threshold=2.0, warmup_steps=3)
+    # compile step is 500x a steady step; old code seeded the EWMA with it
+    assert mon.record(0, 50.0) is False
+    assert mon.record(1, 0.1) is False
+    assert mon.record(2, 0.1) is False
+    assert mon._ewma == pytest.approx(0.1)   # median of [50, 0.1, 0.1]
+    # an early 5x straggler is now caught (old code: 0.5 < 2*50 passed)
+    assert mon.record(3, 0.5) is True
+    assert mon.events == [(3, 0.5, pytest.approx(0.1))]
+
+
+def test_straggler_monitor_warmup_emits_no_events():
+    from repro.runtime.ft import StragglerMonitor
+
+    mon = StragglerMonitor(threshold=2.0, warmup_steps=4)
+    for step, sec in enumerate([10.0, 0.1, 30.0, 0.1]):
+        assert mon.record(step, sec) is False
+    assert mon.events == []
+    assert mon._ewma == pytest.approx((0.1 + 10.0) / 2)  # even-count median
+
+
+def test_straggler_monitor_zero_warmup_still_works():
+    from repro.runtime.ft import StragglerMonitor
+
+    mon = StragglerMonitor(threshold=2.0, warmup_steps=0)
+    assert mon.record(0, 0.1) is False     # seeds from first sample
+    assert mon.record(1, 0.5) is True
+
+
+def test_time_call_true_median_and_dispersion(monkeypatch):
+    """Regression: ``ts[len(ts)//2]`` is the *upper* median for even iters
+    — a biased input to the tuner's fits.  The fixed version interpolates
+    and carries min/max for dispersion weighting."""
+    from benchmarks import common
+
+    # perf_counter deltas of 1, 2, 3, 10 seconds over 4 timed iters
+    ticks = iter([0.0, 1.0,  10.0, 12.0,  20.0, 23.0,  30.0, 40.0])
+    import time as _time
+    monkeypatch.setattr(_time, "perf_counter", lambda: next(ticks))
+
+    t = common.time_call(lambda: None, warmup=0, iters=4)
+    assert isinstance(t, float)            # call sites keep working
+    assert float(t) == pytest.approx(2.5)  # true median of [1,2,3,10]
+    assert t.t_min == pytest.approx(1.0)
+    assert t.t_max == pytest.approx(10.0)
+    assert t.spread == pytest.approx(9.0)
+    assert t.samples == (1.0, 2.0, 3.0, 10.0)
+
+
+def test_timer_snippet_matches_module_implementation():
+    """The subprocess-embedded snippet is built from the module source —
+    the two can never drift apart."""
+    from benchmarks import common
+
+    ns = {}
+    exec(common.TIMER_SNIPPET, ns)
+    t = ns["Timing"]([4.0, 2.0])
+    assert float(t) == pytest.approx(3.0)      # interpolated, not upper
+    assert (t.t_min, t.t_max) == (2.0, 4.0)
+    assert ns["time_call"].__doc__ == common.time_call.__doc__
+
+
+def test_dispersion_weight_floors():
+    # zero-spread cells still get a finite weight (1% rel floor)
+    w = dispersion_weight(1.0, 1.0, 1.0)
+    assert w == pytest.approx(1.0 / 0.01**2)
+    # spread dominates when larger than the floor
+    assert dispersion_weight(1.0, 0.5, 1.5) == pytest.approx(1.0 / 0.5**2)
