@@ -51,8 +51,8 @@ CONFIGS = [
                            bucket_bytes=32*2**20)),
     ("ring_hier/ch4", dict(transport="ring_hier", chunks=2, channels=4,
                            bucket_bytes=32*2**20)),
-    ("ring_compressed", dict(transport="ring_compressed", chunks=2,
-                             bucket_bytes=32*2**20)),
+    ("ring_hier_int8", dict(transport="ring_hier", chunks=2,
+                            wire_codec="int8", bucket_bytes=32*2**20)),
     ("psum", dict(transport="psum", fuse=False)),
     ("psum_fused", dict(transport="psum", bucket_bytes=32*2**20)),
 ]

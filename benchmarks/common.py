@@ -41,8 +41,11 @@ class Timing(float):
         ts = sorted(float(t) for t in samples)
         mid = len(ts) // 2
         # true median: mean of the middle pair for even sample counts
-        # (ts[len//2] alone is the *upper* median — biased high)
-        med = ts[mid] if len(ts) % 2 else 0.5 * (ts[mid - 1] + ts[mid])
+        # (ts[len//2] alone is the *upper* median — biased high).  Parity
+        # via & 1, not modulo: this source is embedded verbatim in bench
+        # scripts that then go through printf-style substitution, where a
+        # bare percent sign is a format character
+        med = ts[mid] if len(ts) & 1 else 0.5 * (ts[mid - 1] + ts[mid])
         self = super().__new__(cls, med)
         self.t_min = ts[0]
         self.t_max = ts[-1]

@@ -14,7 +14,7 @@ import sys
 import time
 
 from benchmarks import bench_allreduce, bench_arena, bench_cg, bench_halo, \
-    bench_overhead, bench_overlap, bench_serve, bench_stencil
+    bench_moe, bench_overhead, bench_overlap, bench_serve, bench_stencil
 
 SECTIONS = [
     ("fig1_2_5_allreduce", bench_allreduce.run,
@@ -30,6 +30,9 @@ SECTIONS = [
     ("tab_serve_batching", bench_serve.run,
      "Continuous vs static batching + paged-decode throughput: "
      "slots x page_tokens (repro.serve)"),
+    ("tab_moe_ep", bench_moe.run,
+     "EP dispatch/combine A/B: all_to_all transport x channels vs the "
+     "replicated-psum fallback (repro.comm + repro.models.moe)"),
     ("tab1_3_halo", bench_halo.run,
      "Tables I-III: halo exchange schedules"),
     ("tab5_6_stencil", bench_stencil.run,

@@ -15,7 +15,7 @@ remains as a deprecated shim over this package.
 from repro.comm.api import CommConfig, Communicator
 # legacy string-policy mapping: lives with the GradientReducer shim
 from repro.core.reducer import POLICY_TO_TRANSPORT, comm_config_from_policy
-from repro.comm.plan import (ALPHA_S, ChannelAssignment, CommPlan,
+from repro.comm.plan import (A2APlan, ALPHA_S, ChannelAssignment, CommPlan,
                              HaloChannel, HaloPlan, LatencyModel,
                              assign_channels)
 from repro.comm.registry import (Transport, TransportSpec, get_transport,
@@ -23,16 +23,21 @@ from repro.comm.registry import (Transport, TransportSpec, get_transport,
                                  transport_specs)
 from repro.comm.schedule import (CommSchedule, HALO_SCHEDULES, IssueSlot,
                                  SCHEDULE_POLICIES, build_halo_schedule,
-                                 build_schedule, halo_interior_fraction,
-                                 halo_units)
+                                 build_moe_schedule, build_schedule,
+                                 halo_interior_fraction, halo_units)
+from repro.comm.wire_codec import (ErrorFeedback, IdentityCodec,
+                                   Int8BlockCodec, make_codec)
 
 __all__ = [
-    "ALPHA_S", "ChannelAssignment", "CommConfig", "CommPlan", "CommSchedule",
-    "Communicator", "HALO_SCHEDULES", "HaloChannel", "HaloPlan", "IssueSlot",
+    "A2APlan", "ALPHA_S", "ChannelAssignment", "CommConfig", "CommPlan",
+    "CommSchedule",
+    "Communicator", "ErrorFeedback", "HALO_SCHEDULES", "HaloChannel",
+    "HaloPlan", "IdentityCodec", "Int8BlockCodec", "IssueSlot",
     "LatencyModel", "POLICY_TO_TRANSPORT", "SCHEDULE_POLICIES",
     "assign_channels",
-    "build_halo_schedule", "build_schedule", "comm_config_from_policy",
+    "build_halo_schedule", "build_moe_schedule", "build_schedule",
+    "comm_config_from_policy",
     "get_transport", "halo_interior_fraction", "halo_units",
-    "list_transports", "register_transport", "Transport", "TransportSpec",
-    "transport_specs",
+    "list_transports", "make_codec", "register_transport", "Transport",
+    "TransportSpec", "transport_specs",
 ]

@@ -37,13 +37,14 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.comm.plan import (ChannelAssignment, CommPlan, HaloChannel,
-                             HaloPlan, assign_channels)
+from repro.comm.plan import (A2APlan, ChannelAssignment, CommPlan,
+                             HaloChannel, HaloPlan, assign_channels)
 from repro.comm.registry import Transport, get_transport
 from repro.comm.schedule import (CommSchedule, build_halo_schedule,
-                                 build_schedule, halo_units)
+                                 build_moe_schedule, build_schedule,
+                                 halo_units)
 from repro.core.bucketing import BucketPlan, GradientBucketer
-from repro.core.compression import ErrorFeedback
+from repro.comm.wire_codec import ErrorFeedback
 from repro.core.halo import HaloSpec, halo_exchange as _halo_exchange
 from repro.core.ring import RingConfig
 from repro.core.topology import order_token, reduce_axes_of
@@ -349,6 +350,138 @@ class Communicator:
             halos=tuple(s.halo for s in specs),
             unit_keys=tuple(keys),
             unit_bytes=sched.bucket_sizes,
+            channels=chans,
+            overlap_fraction=sched.overlap_fraction,
+        )
+
+    # -- all-to-all (expert-parallel dispatch/combine) -----------------------
+
+    def _a2a_axis(self) -> str:
+        if len(self.axes) != 1:
+            raise ValueError(
+                f"all_to_all needs exactly one comm axis, got {self.axes}; "
+                f"construct the Communicator with data_axes=('model',) (or "
+                f"the single EP axis)")
+        if not self.spec.supports_a2a:
+            raise ValueError(
+                f"transport {self.cfg.transport!r} does not support "
+                f"all-to-all (supports_a2a=False); use 'a2a', a ring "
+                f"transport, or 'psum' (honest replicated fallback)")
+        return self.axes[0]
+
+    def a2a_rails(self, shape: Sequence[int]) -> int:
+        """Independent channel rails one all-to-all of ``shape`` splits into.
+
+        The payload is striped along its last (feature) dimension —
+        ``cfg.channels`` rails when it divides evenly, else a single rail.
+        Each rail is an independent collective (its own ppermute chain /
+        HLO all-to-all op), the multi-EP concurrency knob applied to
+        dispatch.
+        """
+        c = self.cfg.channels
+        if c <= 1:
+            return 1
+        return c if int(shape[-1]) % c == 0 else 1
+
+    def all_to_all(self, x: jax.Array, *, split_axis: int,
+                   concat_axis: int) -> jax.Array:
+        """Channelized tiled all-to-all over the single comm axis.
+
+        Semantics of ``lax.all_to_all(..., tiled=True)``: ``x`` splits into
+        ``R`` blocks along ``split_axis``, block ``j`` travels to rank
+        ``j``, received blocks concatenate along ``concat_axis`` in source
+        order.  With ``cfg.channels >= 2`` the payload is striped along its
+        last dimension into that many independent rails.
+        """
+        axis = self._a2a_axis()
+        if self.axis_sizes[0] == 1:
+            return x                   # single rank: nothing moves (and the
+                                       # axis may not even be bound here)
+        rails = self.a2a_rails(x.shape)
+        if rails <= 1:
+            return self.transport.all_to_all(
+                x, axis, split_axis=split_axis, concat_axis=concat_axis)
+        w = x.shape[-1] // rails
+        outs = []
+        for c in range(rails):
+            part = lax.slice_in_dim(x, c * w, (c + 1) * w, axis=x.ndim - 1)
+            outs.append(self.transport.all_to_all(
+                part, axis, split_axis=split_axis, concat_axis=concat_axis))
+        return jnp.concatenate(outs, axis=-1)
+
+    def all_to_all_ragged(self, payload: jax.Array, counts: jax.Array, *,
+                          split_axis: int, concat_axis: int
+                          ) -> tuple[jax.Array, jax.Array]:
+        """All-to-all of capacity-padded blocks plus their valid-row counts.
+
+        The capacity-factor overflow story: each of the ``R`` destination
+        blocks along ``split_axis`` is padded to the static capacity, and
+        ``counts`` (int32, shape ``(R,)``) carries how many leading rows of
+        each block are real.  Both travel; the receiver gets
+        ``(recv_payload, recv_counts)`` where ``recv_counts[j]`` is how many
+        rows source ``j`` actually filled — positions past the count are
+        pad and must be masked by the caller.  Priced as the payload
+        exchange plus ``4 * R`` count bytes.
+        """
+        axis = self._a2a_axis()
+        r = self.axis_sizes[0]
+        if counts.shape[0] != r:
+            raise ValueError(
+                f"counts must have shape ({r},), got {counts.shape}")
+        recv = self.all_to_all(payload, split_axis=split_axis,
+                               concat_axis=concat_axis)
+        if r == 1:
+            return recv, counts.astype(jnp.int32)
+        recv_counts = self.transport.all_to_all(
+            counts.astype(jnp.int32), axis, split_axis=0, concat_axis=0)
+        return recv, recv_counts
+
+    def moe_schedule(self, shape: Sequence[int],
+                     dtype=jnp.float32) -> CommSchedule:
+        """Issue slots for one EP dispatch + combine round-trip of a local
+        capacity buffer of ``shape``: per-rail dispatch slots ready early
+        (they overlap the previous layer / router math) and combine slots
+        ready late (they overlap the expert GEMMs)."""
+        axis = self._a2a_axis()
+        r = self.axis_sizes[0]
+        n = 1
+        for d in shape:
+            n *= int(d)
+        itemsize = jnp.dtype(dtype).itemsize
+        rails = self.a2a_rails(shape)
+        phase_bytes = self.transport.predicted_a2a_bytes_per_device(
+            n, r, itemsize)
+        return build_moe_schedule(phase_bytes, rails)
+
+    def a2a_plan(self, shape: Sequence[int], dtype=jnp.float32) -> A2APlan:
+        """Predicted wire cost of one EP dispatch + combine round-trip —
+        the :class:`~repro.comm.plan.A2APlan` analogue of :meth:`plan`,
+        read by the dry-run's moe suite and ``benchmarks/bench_moe.py``."""
+        axis = self._a2a_axis()
+        r = self.axis_sizes[0]
+        n = 1
+        for d in shape:
+            n *= int(d)
+        itemsize = jnp.dtype(dtype).itemsize
+        rails = self.a2a_rails(shape)
+        sched = self.moe_schedule(shape, dtype)
+        by_channel: dict[int, list[int]] = {}
+        for slot in sched.slots:
+            by_channel.setdefault(slot.channel, []).extend(slot.bucket_ids)
+        chans = tuple(HaloChannel(c, tuple(sorted(u)), sum(
+            sched.bucket_sizes[i] for i in u)) for c, u in
+            sorted(by_channel.items()))
+        keys = tuple(f"{phase}#{c}" for phase in ("dispatch", "combine")
+                     for c in range(rails))
+        return A2APlan(
+            transport=self.cfg.transport,
+            axis=axis,
+            axis_size=r,
+            elems_per_device=n,
+            itemsize=itemsize,
+            unit_keys=keys,
+            unit_bytes=sched.bucket_sizes,
+            messages_per_unit=self.transport.predicted_a2a_messages_per_device(r),
             channels=chans,
             overlap_fraction=sched.overlap_fraction,
         )

@@ -14,9 +14,18 @@ Built-in transports (the former ``ReduceConfig.policy`` branches):
 ========================  ====================================================
 ``ring``                  flat multi-channel bidirectional ring (pod-oblivious)
 ``ring_hier``             pod-aware hierarchical ring (RS inner, recurse outer)
-``ring_compressed``       deprecated shim: ring_hier + ``wire_codec='int8'``
 ``psum``                  XLA's native all-reduce (vendor reference)
+``a2a``                   native ``lax.all_to_all`` (EP dispatch/combine)
 ========================  ====================================================
+
+(The old ``ring_compressed`` shim was removed: use any ring transport with
+``CommConfig(wire_codec="int8")`` — see :mod:`repro.comm.wire_codec`.)
+
+``supports_a2a`` marks transports that can move an expert-parallel capacity
+buffer: ring transports implement it as ``p - 1`` explicit pairwise ppermute
+hops, ``psum`` as the honest replicated fallback (scatter into the full
+exchange matrix, all-reduce, slice own column — priced at its true
+``2(p-1)`` cost), and ``a2a`` lowers to a single HLO ``all-to-all`` op.
 
 Third-party schedules register the same way::
 
@@ -31,8 +40,10 @@ from dataclasses import dataclass
 from typing import Callable, Sequence, Type
 
 import jax
+import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.core import ring as ring_lib
 from repro.core.ring import RingConfig
 
@@ -49,6 +60,7 @@ class TransportSpec:
     wire_dtypes: tuple[str | None, ...]    # allowed narrow wire dtypes
     codec: str | None                      # codec this transport always uses
     hierarchical: bool                     # pod-aware byte accounting
+    supports_a2a: bool                     # all_to_all (EP dispatch/combine)
     description: str
 
 
@@ -60,6 +72,7 @@ def register_transport(name: str, *, supports_rs: bool,
                        wire_dtypes: tuple[str | None, ...] = WIRE_DTYPES_ANY,
                        codec: str | None = None,
                        hierarchical: bool = False,
+                       supports_a2a: bool = False,
                        description: str = "") -> Callable[[type], type]:
     """Class decorator registering a :class:`Transport` under ``name``."""
 
@@ -70,6 +83,7 @@ def register_transport(name: str, *, supports_rs: bool,
                              supports_codec=supports_codec,
                              wire_dtypes=wire_dtypes, codec=codec,
                              hierarchical=hierarchical,
+                             supports_a2a=supports_a2a,
                              description=description or (cls.__doc__ or "").strip())
         _TRANSPORTS[name] = (spec, cls)
         cls.spec = spec
@@ -83,6 +97,11 @@ def get_transport(name: str) -> tuple[TransportSpec, Type["Transport"]]:
     try:
         return _TRANSPORTS[name]
     except KeyError:
+        if name == "ring_compressed":
+            raise ValueError(
+                "transport 'ring_compressed' was removed; use a ring "
+                "transport with CommConfig(wire_codec='int8') instead "
+                "(codecs live in repro.comm.wire_codec)") from None
         raise ValueError(
             f"unknown transport {name!r}; registered transports: "
             f"{tuple(sorted(_TRANSPORTS))}") from None
@@ -137,6 +156,12 @@ class Transport:
         raise NotImplementedError(
             f"transport {self.spec.name!r} does not support all-gather")
 
+    def all_to_all(self, x: jax.Array, axis: str, *, split_axis: int,
+                   concat_axis: int) -> jax.Array:
+        """Tiled all-to-all over a single mesh axis (EP dispatch/combine)."""
+        raise NotImplementedError(
+            f"transport {self.spec.name!r} does not support all-to-all")
+
     # -- analysis -----------------------------------------------------------
 
     def predicted_bytes_per_device(self, n_elems: int,
@@ -170,9 +195,20 @@ class Transport:
         bytes), see :class:`RingTransport`."""
         return float(sum(2 * (p - 1) for p in axis_sizes))
 
+    def predicted_a2a_bytes_per_device(self, n_elems: int, axis_size: int,
+                                       itemsize: int = 4) -> float:
+        """Wire bytes per device for one all-to-all of a local ``n_elems``
+        payload: ``(p-1)/p`` of it leaves the device (the own-block stays)."""
+        p = max(int(axis_size), 1)
+        return (p - 1) / p * n_elems * itemsize
+
+    def predicted_a2a_messages_per_device(self, axis_size: int) -> float:
+        """Sends per device for one all-to-all: ``p - 1`` pairwise hops."""
+        return float(max(int(axis_size) - 1, 0))
+
 
 @register_transport(
-    "ring", supports_rs=True, supports_codec=True,
+    "ring", supports_rs=True, supports_codec=True, supports_a2a=True,
     description="flat multi-channel bidirectional ppermute ring; every byte "
                 "crosses every axis at full size (pod-oblivious baseline)")
 class RingTransport(Transport):
@@ -180,6 +216,11 @@ class RingTransport(Transport):
 
     def all_reduce(self, flat: jax.Array) -> jax.Array:
         return ring_lib.flat_all_reduce(flat, self.axes, self.ring_cfg)
+
+    def all_to_all(self, x: jax.Array, axis: str, *, split_axis: int,
+                   concat_axis: int) -> jax.Array:
+        return ring_lib.ring_all_to_all(x, axis, split_axis=split_axis,
+                                        concat_axis=concat_axis)
 
     def predicted_messages_per_device(self, axis_sizes: Sequence[int]
                                       ) -> float:
@@ -200,6 +241,7 @@ class RingTransport(Transport):
 
 @register_transport(
     "ring_hier", supports_rs=True, supports_codec=True, hierarchical=True,
+    supports_a2a=True,
     description="pod-aware hierarchical ring: reduce-scatter the intra-pod "
                 "axis first so cross-pod bytes shrink by the pod size")
 class HierRingTransport(RingTransport):
@@ -211,31 +253,43 @@ class HierRingTransport(RingTransport):
 
 
 @register_transport(
-    "ring_compressed", supports_rs=True, supports_codec=True, codec="int8",
-    hierarchical=True, wire_dtypes=(None,),
-    description="deprecated shim: exactly ring_hier with wire_codec='int8' "
-                "(prefer the CommConfig knob, which also enables the fused "
-                "arena pack+quantize path)")
-class CompressedRingTransport(HierRingTransport):
-    """Deprecated shim: ``ring_hier`` whose spec pins ``codec='int8'``.
-
-    Kept so existing configs keep running; the codec is now a
-    :class:`~repro.comm.api.CommConfig` knob (``wire_codec``) orthogonal to
-    the transport, and only the knob form gets the quantized-arena path
-    (fused pack+quantize, error feedback in the train state, priced wire
-    bytes).  Same hops, same codec, same numbers as before.
-    """
-
-
-@register_transport(
-    "psum", supports_rs=False, wire_dtypes=(None,),
+    "psum", supports_rs=False, wire_dtypes=(None,), supports_a2a=True,
     description="XLA's built-in all-reduce (vendor reference point); "
-                "no explicit schedule, no RS/AG decomposition")
+                "no explicit schedule, no RS/AG decomposition; all_to_all "
+                "is the honest replicated fallback (full-matrix psum)")
 class PsumTransport(Transport):
     """Native ``lax.psum`` over the data axes."""
 
     def all_reduce(self, flat: jax.Array) -> jax.Array:
         return lax.psum(flat, self.axes)
+
+    def all_to_all(self, x: jax.Array, axis: str, *, split_axis: int,
+                   concat_axis: int) -> jax.Array:
+        """Replicated-psum emulation — the pre-a2a MoE dispatch pattern.
+
+        Each rank scatters its row of the (src, dst) exchange matrix into a
+        zero-padded full buffer, all-reduces the whole matrix, then slices
+        its own column.  Every byte of the matrix crosses the wire (the
+        ``2(p-1)`` replicated tax this PR's ring/native paths eliminate);
+        kept as the honest fallback so the A/B cost is measurable.
+        """
+        p = compat.axis_size(axis)
+        if p == 1:
+            return x
+        n = x.shape[split_axis]
+        if n % p != 0:
+            raise ValueError(
+                f"all_to_all split dim {n} not divisible by axis size {p}")
+        blk = n // p
+        blocks = jnp.stack(
+            [lax.slice_in_dim(x, j * blk, (j + 1) * blk, axis=split_axis)
+             for j in range(p)], axis=0)                  # (p_dst, ...)
+        i = lax.axis_index(axis)
+        full = jnp.zeros((p,) + blocks.shape, blocks.dtype)
+        full = lax.dynamic_update_slice_in_dim(full, blocks[None], i, axis=0)
+        full = lax.psum(full, axis)                       # (p_src, p_dst, ...)
+        col = lax.dynamic_index_in_dim(full, i, axis=1, keepdims=False)
+        return jnp.concatenate([col[j] for j in range(p)], axis=concat_axis)
 
     def predicted_bytes_per_device(self, n_elems: int,
                                    axis_sizes: Sequence[int]) -> float:
@@ -250,3 +304,31 @@ class PsumTransport(Transport):
         for p in axis_sizes:
             world *= p
         return float(2 * (world - 1)) if world > 1 else 0.0
+
+    def predicted_a2a_bytes_per_device(self, n_elems: int, axis_size: int,
+                                       itemsize: int = 4) -> float:
+        # honest replicated cost: the full (p, n) exchange matrix is
+        # all-reduced, 2(p-1)/p of p*n elems per device
+        p = max(int(axis_size), 1)
+        return 2 * (p - 1) * n_elems * itemsize
+
+    def predicted_a2a_messages_per_device(self, axis_size: int) -> float:
+        p = max(int(axis_size), 1)
+        return float(2 * (p - 1))
+
+
+@register_transport(
+    "a2a", supports_rs=False, wire_dtypes=(None,), supports_a2a=True,
+    description="native lax.all_to_all (single HLO all-to-all op per "
+                "exchange); all_reduce delegates to psum")
+class NativeA2ATransport(Transport):
+    """Native ``lax.all_to_all`` — the vendor collective for EP dispatch."""
+
+    def all_reduce(self, flat: jax.Array) -> jax.Array:
+        return lax.psum(flat, self.axes)
+
+    def all_to_all(self, x: jax.Array, axis: str, *, split_axis: int,
+                   concat_axis: int) -> jax.Array:
+        if compat.axis_size(axis) == 1:
+            return x
+        return lax.all_to_all(x, axis, split_axis, concat_axis, tiled=True)

@@ -1,22 +1,20 @@
-"""DEPRECATED shim: wire codecs + error feedback for gradient reduction.
+"""Wire codecs + error feedback for lossy collective payloads.
 
-This module is the original pytree-payload codec layer used by
-``core.ring``'s ``ring_compressed`` transport.  It is superseded by the
-first-class quantized wire on the arena path:
+First-class home of the codec layer (formerly ``repro.core.compression``,
+removed together with the ``ring_compressed`` transport shim).  Two ways to
+put a codec on the wire:
 
-* ``repro.kernels.pack_quant`` — fused Pallas pack+quantize into the donated
-  ``QuantCommArena`` (int8 payload + fp32 block scales in one pass), with
-  error-feedback residuals as a train-state leaf;
 * ``CommConfig.wire_codec="int8"`` (or ``--wire-codec int8`` on the launch
-  drivers) — applies the codec to any ring-family transport's scheduled
-  arena reduction, priced end-to-end by ``CommPlan.codec_tradeoff``.
+  drivers) — applies the codec to any ring-family transport; with
+  ``use_arena`` the fused Pallas pack+quantize path
+  (:mod:`repro.kernels.pack_quant`) writes the int8 payload + fp32 block
+  scales in one pass and carries error-feedback residuals as a train-state
+  leaf, priced end-to-end by ``CommPlan.codec_tradeoff``;
+* ``RingConfig.codec="int8"`` — the eager per-hop form used directly by
+  :mod:`repro.core.ring`.
 
-Prefer ``wire_codec`` over the ``ring_compressed`` transport: the shim keeps
-the original eager encode/decode semantics (kept bit-identical for the
-pinned tests and as the reference the fused kernels are checked against) but
-does not fuse packing with quantization and carries no arena layout.  The
-quantization math here is the single source of truth — ``kernels/quant/ref``
-and ``kernels/pack_quant/ref`` mirror it exactly:
+The quantization math here is the single source of truth —
+``kernels/quant/ref`` and ``kernels/pack_quant/ref`` mirror it exactly:
 ``scale = max(absmax/127, tiny)``; ``q = clip(round(x/scale), ±127)``.
 
 Codecs are pytree-payload transforms used by ``core.ring``:
@@ -29,7 +27,7 @@ Codecs are pytree-payload transforms used by ``core.ring``:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax

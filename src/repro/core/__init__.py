@@ -15,7 +15,6 @@ transports are made of:
   'guaranteed huge pages' analogue).
 * :mod:`repro.core.halo`        — Cartesian halo exchange (QCD workload);
   reachable as ``Communicator.halo_exchange``.
-* :mod:`repro.core.compression` — wire codecs + error feedback.
 * :mod:`repro.core.reducer`     — DEPRECATED ``GradientReducer`` shim kept
   for legacy string-policy call sites (incl. ``POLICY_TO_TRANSPORT``);
   delegates to ``repro.comm``.
@@ -28,7 +27,8 @@ modules directly::
 """
 
 from repro.core.bucketing import BucketPlan, GradientBucketer
-from repro.core.compression import ErrorFeedback, Int8BlockCodec, IdentityCodec, make_codec
+# wire codecs moved to repro.comm.wire_codec; re-exported here for compat
+from repro.comm.wire_codec import ErrorFeedback, Int8BlockCodec, IdentityCodec, make_codec
 from repro.core.halo import HaloSpec, halo_exchange, pad_with_halos
 from repro.core.reducer import GradientReducer, ReduceConfig, per_tensor_reducer
 from repro.core.ring import (RingConfig, flat_all_reduce, hierarchical_all_reduce,

@@ -10,7 +10,7 @@ reduction and halo exchange.  Policy names map onto transports:
 ``baidu_original``         ``ring`` (chunks=1, unidirectional, fp32 wire)
 ``fused_ring``             ``ring``
 ``fused_ring_hierarchical``  ``ring_hier``  (default)
-``fused_ring_compressed``  ``ring_compressed``
+``fused_ring_compressed``  ``ring_hier`` + ``wire_codec='int8'``
 ``native_psum``            ``psum`` (fuse=False, per-tensor)
 ``native_psum_fused``      ``psum``
 =========================  ==============================================
@@ -49,7 +49,7 @@ POLICY_TO_TRANSPORT: dict[str, tuple[str, dict]] = {
                                 "wire_dtype": None, "local_op": "jnp"}),
     "fused_ring": ("ring", {}),
     "fused_ring_hierarchical": ("ring_hier", {}),
-    "fused_ring_compressed": ("ring_compressed", {}),
+    "fused_ring_compressed": ("ring_hier", {"wire_codec": "int8"}),
     "native_psum": ("psum", {"fuse": False}),
     "native_psum_fused": ("psum", {}),
 }

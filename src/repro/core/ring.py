@@ -16,7 +16,7 @@ all-gather ring whose *schedule* we control, instead of a single opaque
   OpenMP-threaded reduce loop; here a VPU-aligned fused op (optionally the
   ``kernels/reduce_add`` Pallas kernel) with fp32 accumulation;
 * **wire codecs** (beyond-paper) — hops can carry bf16 or block-int8
-  payloads (``core.compression``), shrinking collective bytes.
+  payloads (``repro.comm.wire_codec``), shrinking collective bytes.
 
 All functions operate on *flat, pre-padded* 1-D buffers inside a
 ``shard_map`` manual context (``core.bucketing`` produces those buffers).
@@ -36,7 +36,6 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import compat
-from repro.core.compression import make_codec
 from repro.core.topology import ring_perm
 
 LocalAdd = Callable[[jax.Array, jax.Array], jax.Array]
@@ -55,6 +54,11 @@ class RingConfig:
     codec_block: int = 512
 
     def make_codec(self):
+        # lazy: repro.comm.wire_codec is the codec's first-class home, and
+        # importing repro.comm at module level would close a cycle through
+        # repro.comm.api -> repro.core.ring
+        from repro.comm.wire_codec import make_codec
+
         return make_codec(self.codec, wire_dtype=self.wire_dtype,
                           block=self.codec_block)
 
@@ -258,3 +262,51 @@ def flat_all_reduce(x: jax.Array, axes: Sequence[str],
     for axis in axes:
         x = ring_all_reduce(x, axis, cfg)
     return x
+
+
+# ---------------------------------------------------------------------------
+# all-to-all (expert-parallel dispatch/combine)
+# ---------------------------------------------------------------------------
+
+
+def ring_all_to_all(x: jax.Array, axis: str, *, split_axis: int,
+                    concat_axis: int) -> jax.Array:
+    """Explicit all-to-all built from ``p - 1`` pairwise ppermute hops.
+
+    Semantics match ``lax.all_to_all(..., tiled=True)``: ``x`` is split into
+    ``p`` equal blocks along ``split_axis``; block ``j`` travels to device
+    ``j``; the received blocks (one per source, in source order) are
+    concatenated along ``concat_axis``.
+
+    Hop ``s`` ships each device's block for destination ``(r + s) % p`` via
+    the uniform shift permutation ``r -> (r + s) % p`` — every hop drives all
+    links concurrently (the paper's concurrency-through-the-stack pattern)
+    and each block crosses the wire exactly once, so per-device wire traffic
+    is ``(p - 1)/p`` of the payload in ``p - 1`` messages.
+
+    Every op here is linear (slice/stack/roll/ppermute), so the autodiff
+    transpose is the exact inverse all-to-all — no custom VJP needed.
+    """
+    p = compat.axis_size(axis)
+    n = x.shape[split_axis]
+    if n % max(p, 1) != 0:
+        raise ValueError(
+            f"all_to_all split dim {n} not divisible by axis size {p}")
+    if p == 1:
+        return x
+    blk = n // p
+    blocks = [lax.slice_in_dim(x, j * blk, (j + 1) * blk, axis=split_axis)
+              for j in range(p)]
+    xs = jnp.stack(blocks, axis=0)                       # (p_dst, ...)
+    r = lax.axis_index(axis)
+    # z[s] = block destined for rank (r + s) % p (rank-dependent shift of a
+    # traced amount — roll keeps this inside one fused gather).
+    z = jnp.roll(xs, -r, axis=0)
+    recv = [z[0]]                                        # own block, hop 0
+    for s in range(1, p):
+        perm = [(src, (src + s) % p) for src in range(p)]
+        recv.append(lax.ppermute(z[s], axis, perm))
+    stack = jnp.stack(recv, axis=0)                      # stack[s] <- rank (r - s) % p
+    # Reorder hop order -> source order: w[j] = stack[(r - j) % p].
+    w = jnp.roll(stack[::-1], r + 1, axis=0)
+    return jnp.concatenate([w[j] for j in range(p)], axis=concat_axis)

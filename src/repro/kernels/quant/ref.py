@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the quant kernels (mirrors core.compression)."""
+"""Pure-jnp oracle for the quant kernels (mirrors comm.wire_codec)."""
 
 from __future__ import annotations
 

@@ -101,7 +101,8 @@ def make_step_config(arch: str, overrides: dict | None = None) -> TrainStepConfi
     st = settings_for(arch)
     ccfg = st.comm_config()
     kw = dict(dp_mode=st.dp_mode, microbatches=st.microbatches,
-              schedule="accumulate_then_reduce", causal_skip=False)
+              schedule="accumulate_then_reduce", causal_skip=False,
+              moe_transport=st.moe_transport, moe_channels=st.moe_channels)
     if overrides:
         stale = [k for k in overrides if k.startswith("reduce_")]
         if stale:
@@ -925,6 +926,222 @@ def run_serve_suite(args, cache: dict) -> None:
                     json.dump(cache, f, indent=1)
 
 
+MOE_DEFAULT_ARCHS = ["mixtral-8x7b", "llama4-maverick-400b-a17b"]
+
+
+def run_moe_cell(arch: str, transport: str, channels: int,
+                 model_parallel: int, parallelism: str, *,
+                 batch: int = 8, seq: int = 32) -> dict:
+    """One ``--suite moe`` cell: lower + compile one MoE forward loss on a
+    ``(1, R)`` mesh and hold the :class:`~repro.comm.plan.A2APlan` to the
+    optimized HLO:
+
+    * **counts** — with ``parallelism='ep'`` every MoE layer must lower to
+      exactly one dispatch + one combine exchange per rail in the
+      transport's op family (``a2a`` → HLO ``all-to-all``, rings →
+      ``collective-permute`` hops, ``psum`` → zero-padded ``all-reduce``);
+      with ``parallelism='tp'`` the all-to-all count must be zero;
+    * **wire bytes** — the parsed bytes of that op family must equal
+      ``n_moe_layers * A2APlan.bytes_per_device`` at <1% tolerance (the
+      parser and the plan price the same ring formulas, so the observed
+      error is 0);
+    * **dispatch tax** — the plan's per-device dispatch bytes must be at
+      most ``1/R`` of the replicated-psum fallback's prediction for the
+      same payload (the PR's headline acceptance bound).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.comm.registry import get_transport
+    from repro.configs import reduced_config
+    from repro.models.moe import capacity
+    from repro.runtime.train_step import build_moe_comm, make_ctx
+
+    r = int(model_parallel)
+    rcfg = reduced_config(arch)
+    if rcfg.moe is None:
+        raise ValueError(f"{arch} has no MoE block")
+    rcfg = rcfg.with_(moe=replace(rcfg.moe, parallelism=parallelism))
+    model = build_model(rcfg)
+    cfg = model.cfg
+    mesh = compat.make_mesh((1, r), ("data", "model"),
+                            devices=jax.devices()[:r])
+    tcfg = TrainStepConfig(moe_transport=transport, moe_channels=channels)
+    ctx = make_ctx(mesh, tcfg)
+    comm = build_moe_comm(mesh, tcfg)
+
+    n_moe = sum(1 for i in range(cfg.num_layers)
+                if cfg.layer_kind(i)["mlp"] == "moe")
+    e, d = cfg.moe.num_experts, cfg.d_model
+    cap = capacity(seq, cfg.moe)
+    bs = batch // r
+    buf_shape = (bs, e, cap, d)          # the local EP dispatch payload
+    plan = comm.a2a_plan(buf_shape, dtype=jnp.float32)
+    sched = comm.moe_schedule(buf_shape, dtype=jnp.float32)
+    sched.validate()
+
+    # the acceptance bound: EP dispatch <= 1/R of the replicated-psum cost
+    n_elems = plan.elems_per_device
+    _, psum_cls = get_transport("psum")
+    psum_t = psum_cls(("model",), None)
+    replicated = psum_t.predicted_a2a_bytes_per_device(n_elems, r,
+                                                       itemsize=4)
+    if transport != "psum" and r > 1 and \
+            plan.dispatch_bytes_per_device > replicated / r:
+        raise AssertionError(
+            f"EP dispatch bytes {plan.dispatch_bytes_per_device:.0f} exceed "
+            f"1/R of the replicated-psum cost {replicated:.0f} at R={r}")
+
+    pspecs = model.param_specs(mesh)
+    batch_abs = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    bspecs = {"tokens": P(), "labels": P()}
+
+    def lower_with(ctx_):
+        def fwd(p, mb):
+            return model.loss_fn(p, mb, ctx=ctx_)
+
+        sh = compat.shard_map(fwd, mesh=mesh, in_specs=(pspecs, bspecs),
+                              out_specs=P(), check_vma=False)
+        with mesh:
+            return jax.jit(sh).lower(model.abstract_params(),
+                                     batch_abs).compile()
+
+    t0 = time.time()
+    compiled = lower_with(ctx)
+    compile_s = time.time() - t0
+    txt = compiled.as_text()
+    stats = collective_wire_bytes(txt)
+
+    # which HLO op family carries the exchange, and the expected op count
+    rails = comm.a2a_rails(buf_shape)
+    ep_active = parallelism == "ep" and r > 1 and e % r == 0 \
+        and batch % r == 0
+    family = {"a2a": "all-to-all", "ring": "collective-permute",
+              "ring_hier": "collective-permute", "psum": "all-reduce"}[
+                  transport]
+    if not ep_active:
+        want_ops = 0
+        predicted_bytes = 0.0
+    elif family == "all-to-all":
+        want_ops = n_moe * 2 * rails
+        predicted_bytes = n_moe * plan.bytes_per_device
+    elif family == "collective-permute":
+        want_ops = n_moe * 2 * rails * (r - 1)
+        predicted_bytes = n_moe * plan.bytes_per_device
+    else:                                 # psum fallback
+        want_ops = n_moe * 2 * rails
+        predicted_bytes = n_moe * plan.bytes_per_device
+
+    n_ops = stats.op_counts.get(family, 0)
+    measured = stats.op_bytes.get(family, 0.0)
+    if family == "all-reduce" and ep_active:
+        # the psum fallback shares its op family with the model's TP
+        # all-reduces; diff against the identical graph lowered with the
+        # native-a2a transport to isolate the exchange's contribution
+        bg = collective_wire_bytes(lower_with(make_ctx(
+            mesh, replace(tcfg, moe_transport="a2a"))).as_text())
+        n_ops -= bg.op_counts.get(family, 0)
+        measured -= bg.op_bytes.get(family, 0.0)
+    if parallelism == "tp" and stats.op_counts.get("all-to-all", 0):
+        raise AssertionError(
+            f"tp parallelism lowered {stats.op_counts['all-to-all']} "
+            f"all-to-all ops; expected none")
+    if ep_active:
+        if n_ops != want_ops:
+            raise AssertionError(
+                f"{family} op count {n_ops} != predicted {want_ops} "
+                f"({n_moe} MoE layers x dispatch+combine x {rails} rails)")
+        err = (abs(measured - predicted_bytes) / predicted_bytes
+               if predicted_bytes else 0.0)
+        if err >= 0.01:
+            raise AssertionError(
+                f"{family} wire bytes: predicted {predicted_bytes:.0f}, "
+                f"HLO {measured:.0f} (err {err:.2%} >= 1%)")
+    else:
+        err = 0.0
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    roof = Roofline(
+        flops_per_device=float(ca.get("flops", 0.0)),
+        hbm_bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        wire_bytes_per_device=stats.wire_bytes,
+        messages_per_device=float(stats.messages),
+        overlap_fraction=sched.overlap_fraction if ep_active else 0.0,
+    )
+    return {
+        "arch": arch, "suite": "moe",
+        "transport": transport, "channels": channels, "rails": rails,
+        "parallelism": parallelism, "mesh": f"1x{r}", "devices": r,
+        "ep_active": ep_active,
+        "n_moe_layers": n_moe, "capacity": cap,
+        "buf_shape": list(buf_shape),
+        "compile_s": compile_s,
+        "predicted_a2a_bytes": predicted_bytes,
+        "hlo_a2a_bytes": measured,
+        "byte_err": err,
+        "predicted_a2a_ops": want_ops,
+        "hlo_a2a_ops": n_ops,
+        "dispatch_bytes_per_device": plan.dispatch_bytes_per_device,
+        "replicated_psum_bytes": replicated,
+        "dispatch_vs_replicated":
+            (plan.dispatch_bytes_per_device / replicated if replicated
+             else 0.0),
+        "messages_per_device": plan.messages_per_device,
+        "overlap_fraction": sched.overlap_fraction,
+        "a2a_plan": plan.describe(),
+        "roofline": roof.as_dict(r),
+    }
+
+
+def run_moe_suite(args, cache: dict) -> None:
+    """The ``--suite moe`` grid: arch × transport × channels × parallelism,
+    each cell asserting predicted all-to-all ops/bytes against the lowered
+    HLO (<1% tolerance) and the EP-dispatch-tax bound vs the replicated
+    psum fallback."""
+    archs = (MOE_DEFAULT_ARCHS if args.arch == "all"
+             else args.arch.split(","))
+    transports = str(args.moe_transports).split(",")
+    chans = [int(s) for s in str(args.moe_channels).split(",")]
+    rs = [int(s) for s in str(args.moe_mp).split(",")]
+    for arch in archs:
+        for transport in transports:
+            for ch in chans:
+                for r in rs:
+                    for par in ("ep", "tp"):
+                        if par == "tp" and (transport != "a2a" or ch != 0):
+                            continue   # tp lowers no exchange; one cell enough
+                        grid = {"transport": transport, "channels": ch,
+                                "parallelism": par}
+                        key = cell_key(args.tag, arch, "moe", f"r{r}", grid)
+                        if key in cache and not args.force:
+                            print(f"[cached] {key}")
+                            continue
+                        print(f"[lower+compile] {key} ...", flush=True)
+                        t0 = time.time()
+                        try:
+                            rec = run_moe_cell(arch, transport, ch, r, par)
+                            rec["tag"] = args.tag
+                            cache[key] = rec
+                            print(
+                                f"  ok in {time.time()-t0:.1f}s: "
+                                f"ops={rec['hlo_a2a_ops']} "
+                                f"bytes={rec['hlo_a2a_bytes']:.0f} "
+                                f"(err {rec['byte_err']:.2%}) "
+                                f"dispatch/replicated="
+                                f"{rec['dispatch_vs_replicated']:.3f}",
+                                flush=True)
+                        except Exception as e:
+                            cache[key] = {"error": str(e), "tag": args.tag,
+                                          "arch": arch, "shape": "moe"}
+                            print(f"  FAILED: {e}")
+                            traceback.print_exc()
+                        with open(args.out, "w") as f:
+                            json.dump(cache, f, indent=1)
+
+
 STENCIL_MESH = {"single": ((4, 8, 8), 256), "multi": ((8, 8, 8), 512)}
 
 
@@ -1122,7 +1339,7 @@ def main() -> None:
                          "(stream/scheduled overlap comm with backward "
                          "compute; reflected in t_exposed_collective)")
     ap.add_argument("--suite", default="train",
-                    choices=["train", "stencil", "mem", "serve"],
+                    choices=["train", "stencil", "mem", "serve", "moe"],
                     help="train: the arch x shape grid below; stencil: the "
                          "QCD workload — lattice-volume x halo-schedule "
                          "cells on a 3-D Cartesian mesh, checking HaloPlan "
@@ -1134,7 +1351,12 @@ def main() -> None:
                          "grid — arch x page_tokens x model-parallel paged "
                          "decode steps asserting predicted KV bytes/pages "
                          "and per-token collective counts against lowered "
-                         "HLO with zero tolerance")
+                         "HLO with zero tolerance; moe: the expert-parallel "
+                         "grid — arch x transport x channels x ep/tp MoE "
+                         "forward losses asserting predicted all-to-all "
+                         "ops/bytes (A2APlan) against lowered HLO at <1%% "
+                         "tolerance and the EP dispatch <= replicated/R "
+                         "bound")
     ap.add_argument("--page-bytes", default="4096,2097152",
                     help="mem suite: comma-separated arena page sizes "
                          "(default: 4 KiB small-page baseline and the "
@@ -1151,6 +1373,14 @@ def main() -> None:
                          "small --page-bytes, e.g. 4096: 2 MiB pages "
                          "quantize the int8 payload 4x coarser and the "
                          "padding eats the ratio)")
+    ap.add_argument("--moe-transports", default="a2a,psum",
+                    help="moe suite: comma-separated exchange transports "
+                         "(a2a,ring,ring_hier,psum)")
+    ap.add_argument("--moe-channels", default="0,2",
+                    help="moe suite: comma-separated rail counts for the "
+                         "EP payload's feature-dim striping (0 = single)")
+    ap.add_argument("--moe-mp", default="2",
+                    help="moe suite: comma-separated model-axis sizes R")
     ap.add_argument("--page-tokens", default="8,16",
                     help="serve suite: comma-separated KV page sizes in "
                          "token positions")
@@ -1199,11 +1429,13 @@ def main() -> None:
         with open(args.out) as f:
             cache = json.load(f)
 
-    if args.suite in ("stencil", "mem", "serve"):
+    if args.suite in ("stencil", "mem", "serve", "moe"):
         if args.suite == "stencil":
             run_stencil_suite(args, meshes, cache)
         elif args.suite == "mem":
             run_mem_suite(args, cache, tuned_db=tuned_db)
+        elif args.suite == "moe":
+            run_moe_suite(args, cache)
         else:
             run_serve_suite(args, cache)
         n_ok = sum(1 for v in cache.values() if "error" not in v)

@@ -32,6 +32,9 @@ class ArchSettings:
                                    # feedback; ~3.9x fewer collective bytes)
     page_bytes: int | str = 2 * 2**20  # arena granule (paper's huge page),
                                        # or "auto": from the tuning DB
+    moe_transport: str = "a2a"  # EP dispatch/combine exchange (MoE archs
+                                # only): a2a | ring | ring_hier | psum
+    moe_channels: int = 0       # EP payload rails (0 = one)
 
     def comm_config(self, *, chunks: int = 2,
                     bucket_bytes: int = 256 * 2**20,
@@ -72,10 +75,11 @@ SETTINGS: dict[str, ArchSettings] = {
     "falcon-mamba-7b": ArchSettings("fsdp", 4, "resident", channels=2),
     "phi3-medium-14b": ArchSettings("fsdp", 4, "resident", channels=2),
     "llava-next-34b": ArchSettings("fsdp", 8, "resident", channels=2),
-    "mixtral-8x7b": ArchSettings("fsdp", 4, "resident", channels=2),
+    "mixtral-8x7b": ArchSettings("fsdp", 4, "resident", channels=2,
+                                 moe_channels=2),
     # 400B: weights cannot reside on a 16-way model axis; serve gathers
     "llama4-maverick-400b-a17b": ArchSettings("fsdp", 4, "gathered",
-                                              channels=2),
+                                              channels=2, moe_channels=2),
 }
 
 

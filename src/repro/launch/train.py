@@ -102,7 +102,8 @@ def main() -> None:
                           schedule=schedule, total_steps=args.steps),
         microbatches=1 if args.reduced else st.microbatches,
         schedule=args.accum_policy or "accumulate_then_reduce",
-        use_arena=args.use_arena, wire_codec=args.wire_codec)
+        use_arena=args.use_arena, wire_codec=args.wire_codec,
+        moe_transport=st.moe_transport, moe_channels=st.moe_channels)
     trainer = Trainer(model, mesh, step_cfg, data, shape,
                       TrainerConfig(steps=args.steps, ckpt_every=50,
                                     ckpt_dir=args.ckpt_dir, log_every=10))

@@ -79,27 +79,32 @@ class Model:
     # -- steps -----------------------------------------------------------------
 
     def loss_fn(self, params, batch, *, ctx: ParallelCtx = SINGLE,
-                causal_skip: bool = False, block_resolver=None):
+                causal_skip: bool = False, block_resolver=None,
+                stats_out: list | None = None):
         if self._encdec:
             if block_resolver is not None:
                 raise NotImplementedError(
                     "FSDP block_resolver is decoder-only; enc-dec archs use "
                     "tp/zero1 sharding")
+            if stats_out is not None:   # no MoE layers in enc-dec stacks
+                stats_out.append({"moe_drop_fraction":
+                                  jnp.zeros((), jnp.float32)})
             return encdec.loss_fn(params, batch, self.cfg, ctx=ctx,
                                   causal_skip=causal_skip)
         return transformer.loss_fn(params, batch, self.cfg, ctx=ctx,
                                    causal_skip=causal_skip,
-                                   block_resolver=block_resolver)
+                                   block_resolver=block_resolver,
+                                   stats_out=stats_out)
 
     def forward(self, params, batch, *, ctx: ParallelCtx = SINGLE,
                 causal_skip: bool = False):
         if self._encdec:
             return encdec.forward(params, batch["frames"], batch["tokens"],
                                   self.cfg, ctx=ctx, causal_skip=causal_skip)
-        logits, _ = transformer.forward(params, batch["tokens"], self.cfg,
-                                        ctx=ctx,
-                                        extra_embeds=batch.get("extra_embeds"),
-                                        causal_skip=causal_skip)
+        logits, _, _ = transformer.forward(params, batch["tokens"], self.cfg,
+                                           ctx=ctx,
+                                           extra_embeds=batch.get("extra_embeds"),
+                                           causal_skip=causal_skip)
         return logits
 
     def init_decode_state(self, batch: int, seq_len: int, params=None,

@@ -5,12 +5,18 @@ movement, which is what a production dispatch does).
 Per batch row: route tokens to ``top_k`` experts, sort the (token, expert)
 pairs by expert, scatter into a (E, C, d) capacity buffer, run every expert
 as one batched GLU matmul, gather back with gate weights.  Tokens beyond an
-expert's capacity are dropped (standard capacity-factor semantics); a shared
-expert (llama4) adds a dense always-on path.
+expert's capacity are dropped (standard capacity-factor semantics) and
+reported via the ``drop_fraction`` metric; a shared expert (llama4) adds a
+dense always-on path.
 
 Parallelism modes (applied by ``sharding.rules``):
-* ``ep`` — expert dim of the weights and the (E, C, d) buffer sharded over
-  "model"; GSPMD inserts the all-to-all on the buffer boundary.
+* ``ep`` — expert dim of the weights sharded over "model"; the capacity
+  buffer is built per *batch shard* and exchanged through
+  ``ctx.all_to_all`` (dispatch: batch-sharded in, expert-sharded out;
+  combine: the inverse), so only ``1/R``-th of the buffer crosses the wire
+  per hop instead of the old replicated psum's full copy.  When the batch
+  does not divide the EP axis (e.g. decode micro-batches) the honest
+  replicated-psum fallback below is used.
 * ``tp`` — expert ffn dim sharded over "model" (for E smaller than the axis).
 """
 
@@ -48,14 +54,54 @@ def capacity(tokens_per_row: int, cfg: MoEConfig) -> int:
     return max(8, int(math.ceil(c / 8) * 8))  # sublane-aligned
 
 
+def load_balance_aux(gates_all: jax.Array, expert_ids: jax.Array,
+                     num_experts: int, top_k: int) -> jax.Array:
+    """Switch-style load-balancing loss, normalized so perfect balance is
+    exactly 1.0 for *every* ``top_k``.
+
+    ``me[e]`` is the mean router probability of expert ``e``; ``pe[e]`` is
+    the mean number of top-k slots assigned to it divided by ``top_k``, so
+    ``sum(pe) == 1`` regardless of k (the previous form collapsed top-k
+    multiplicity through ``> 0`` and skipped the ``1/k``, making the
+    balanced fixed point of ``E * sum(me * pe)`` drift to ``k`` — mixtral
+    k=2 and llama4 k=1 losses were not comparable).
+    """
+    e = num_experts
+    me = jnp.mean(gates_all, axis=(0, 1))                          # (E,)
+    pe = jnp.mean(jax.nn.one_hot(expert_ids, e).sum(axis=2),
+                  axis=(0, 1)) / top_k                             # (E,)
+    return e * jnp.sum(me * pe)
+
+
+def dropped_fraction(expert_ids: jax.Array, num_experts: int,
+                     cap: int) -> jax.Array:
+    """Fraction of (token, expert) assignments past capacity — the tokens
+    :func:`moe_apply` silently zeroes.  Computed from the (replicated)
+    routing decision alone, so it costs one one-hot sum and is identical on
+    every rank."""
+    b = expert_ids.shape[0]
+    flat_ids = expert_ids.reshape(b, -1)                           # (B, S*k)
+    t = flat_ids.shape[1]
+    counts = jnp.sum(jax.nn.one_hot(flat_ids, num_experts,
+                                    dtype=jnp.float32), axis=1)    # (B, E)
+    over = jnp.maximum(counts - cap, 0.0)
+    return jnp.sum(over) / (b * t)
+
+
 def moe_apply(p: dict, x: jax.Array, cfg: MoEConfig, act: str, *, ctx,
-              compute_dtype=jnp.bfloat16) -> tuple[jax.Array, jax.Array]:
-    """x: (B, S, d) -> (y, aux_loss).
+              compute_dtype=jnp.bfloat16
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss, drop_fraction).
 
     Activations are replicated over the TP axis (Megatron-style), so routing
-    and the capacity buffer are computed identically on every model rank.
-    * EP: each rank slices its expert rows from the buffer, computes them,
-      combines its partial output, and a final psum merges expert subsets.
+    is computed identically on every model rank.
+    * EP (batch divides the axis): each rank builds the capacity buffer for
+      its *batch shard* only, ``ctx.all_to_all`` turns it expert-sharded
+      (dispatch), local experts compute, the inverse all-to-all brings the
+      outputs home, and an identity-backward all-gather replicates the
+      combined result — no replicated buffer, no zero-pad psum.
+    * EP (fallback): replicated buffer, slice own experts, zero-pad,
+      psum — the honest replicated cost, also used by transport="psum".
     * TP: every rank runs all experts on its ffn shard; psum after w_down.
     """
     b, s, d = x.shape
@@ -78,12 +124,8 @@ def moe_apply(p: dict, x: jax.Array, cfg: MoEConfig, act: str, *, ctx,
     else:
         gate_w = jax.nn.softmax(gate_vals, axis=-1)                # mixtral renorm
 
-    # load-balancing auxiliary loss (Switch-style)
-    me = jnp.mean(gates_all, axis=(0, 1))                          # (E,)
-    pe = jnp.mean(
-        (jax.nn.one_hot(expert_ids, e).sum(axis=2) > 0).astype(jnp.float32),
-        axis=(0, 1))
-    aux = e * jnp.sum(me * pe)
+    aux = load_balance_aux(gates_all, expert_ids, e, k)
+    drop_frac = dropped_fraction(expert_ids, e, cap)
 
     # ---- sort-based dispatch, vmapped over batch rows ----
     flat_ids = expert_ids.reshape(b, s * k)                        # (B, T)
@@ -110,28 +152,6 @@ def moe_apply(p: dict, x: jax.Array, cfg: MoEConfig, act: str, *, ctx,
         buf = buf.at[dest].set(xrow[tok_of[order]].astype(compute_dtype))
         return buf[:-1].reshape(e, cap, d), order, dest, keep
 
-    buf, order, dest, keep = jax.vmap(dispatch_row)(flat_ids, xd)  # (B,E,C,d)
-
-    # ---- expert compute: one batched GLU over the capacity buffer ----
-    wg = p["w_gate"].astype(compute_dtype)
-    wu = p["w_up"].astype(compute_dtype)
-    wd = p["w_down"].astype(compute_dtype)
-    if ep_sharded:
-        # slice this rank's expert rows out of the (replicated) buffer
-        e0 = ctx.model_index() * e_local
-        buf_c = jax.lax.dynamic_slice_in_dim(buf, e0, e_local, axis=1)
-    else:
-        buf_c = buf
-    h = activation(act)(jnp.einsum("becd,edf->becf", buf_c, wg)) * \
-        jnp.einsum("becd,edf->becf", buf_c, wu)
-    out_buf = jnp.einsum("becf,efd->becd", h, wd)            # (B,E_l,C,d)
-    if ep_sharded:
-        # scatter local experts' outputs back into the full-E layout; the
-        # final psum (below) merges the disjoint expert subsets.
-        full = jnp.zeros((b, e, cap, d), out_buf.dtype)
-        out_buf = jax.lax.dynamic_update_slice_in_dim(full, out_buf, e0, axis=1)
-
-    # ---- combine: gather back and weight by gates ----
     def combine_row(obuf, order_r, dest_r, keep_r, gate_r):
         flat = obuf.reshape(e * cap, d)
         vals = flat[jnp.minimum(dest_r, e * cap - 1)]              # (T, d)
@@ -140,14 +160,54 @@ def moe_apply(p: dict, x: jax.Array, cfg: MoEConfig, act: str, *, ctx,
         y = jnp.zeros((s, d), vals.dtype)
         return y.at[tok_of[order_r]].add(vals * g)
 
-    y = jax.vmap(combine_row)(out_buf, order, dest, keep, flat_gate)
-    if ep_sharded or tp_sharded:
-        y = ctx.psum(y)
+    wg = p["w_gate"].astype(compute_dtype)
+    wu = p["w_up"].astype(compute_dtype)
+    wd = p["w_down"].astype(compute_dtype)
+
+    def glu(buf_c):
+        h = activation(act)(jnp.einsum("becd,edf->becf", buf_c, wg)) * \
+            jnp.einsum("becd,edf->becf", buf_c, wu)
+        return jnp.einsum("becf,efd->becd", h, wd)
+
+    r = ctx.model_size() if ep_sharded else 1
+    if ep_sharded and r > 1 and b % r == 0:
+        # ---- expert-parallel via all-to-all ----
+        bs = b // r
+        i0 = ctx.model_index() * bs
+        xd_s = jax.lax.dynamic_slice_in_dim(xd, i0, bs, axis=0)
+        ids_s = jax.lax.dynamic_slice_in_dim(flat_ids, i0, bs, axis=0)
+        gate_s = jax.lax.dynamic_slice_in_dim(flat_gate, i0, bs, axis=0)
+        buf_s, order_s, dest_s, keep_s = jax.vmap(dispatch_row)(ids_s, xd_s)
+        # dispatch: (bs, E, C, d) batch-sharded -> (B, E_l, C, d) expert-sharded
+        recv = ctx.all_to_all(buf_s, split_axis=1, concat_axis=0)
+        out = glu(recv)                                      # (B, E_l, C, d)
+        # combine: the inverse exchange brings expert outputs home
+        back = ctx.all_to_all(out, split_axis=0, concat_axis=1)
+        y_s = jax.vmap(combine_row)(back, order_s, dest_s, keep_s, gate_s)
+        y = ctx.gather_replicated(y_s)                       # (B, S, d)
+    else:
+        buf, order, dest, keep = jax.vmap(dispatch_row)(flat_ids, xd)
+        if ep_sharded:
+            # replicated-psum fallback: slice this rank's expert rows out of
+            # the (replicated) buffer, zero-pad back, psum merges subsets
+            e0 = ctx.model_index() * e_local
+            buf_c = jax.lax.dynamic_slice_in_dim(buf, e0, e_local, axis=1)
+        else:
+            buf_c = buf
+        out_buf = glu(buf_c)                                 # (B, E_l, C, d)
+        if ep_sharded:
+            full = jnp.zeros((b, e, cap, d), out_buf.dtype)
+            out_buf = jax.lax.dynamic_update_slice_in_dim(full, out_buf, e0,
+                                                          axis=1)
+        y = jax.vmap(combine_row)(out_buf, order, dest, keep, flat_gate)
+        if ep_sharded or tp_sharded:
+            y = ctx.psum(y)
 
     if "shared" in p:
         from repro.models.common import glu_mlp
 
-        xs = ctx.fan_out(xf) if p["shared"]["w_down"]["w"].shape[0] <             cfg.shared_expert_ff else xf
+        xs = ctx.fan_out(xf) if p["shared"]["w_down"]["w"].shape[0] < \
+            cfg.shared_expert_ff else xf
         y = y + glu_mlp(p["shared"], xs, act, compute_dtype, ctx,
                         cfg.shared_expert_ff)
-    return y.astype(x.dtype), aux
+    return y.astype(x.dtype), aux, drop_frac

@@ -14,7 +14,8 @@ degrades to the identity, so the same model code runs in smoke tests.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,10 @@ from repro import compat
 class ParallelCtx:
     model_axis: str | None = None        # manual TP axis ("model")
     data_axes: tuple[str, ...] = ()      # manual DP axes (("pod","data"))
+    # optional Communicator-backed all_to_all (ctx-level EP dispatch);
+    # signature (x, *, split_axis, concat_axis).  None -> native
+    # lax.all_to_all fallback in :meth:`all_to_all`.
+    a2a: Any = field(default=None, compare=False)
 
     # -- model-axis collectives ------------------------------------------------
 
@@ -54,6 +59,29 @@ class ParallelCtx:
 
     def model_index(self):
         return lax.axis_index(self.model_axis) if self.model_axis else 0
+
+    def all_to_all(self, x, *, split_axis: int, concat_axis: int):
+        """Tiled all-to-all over the model axis (EP dispatch/combine).
+
+        Routes through the attached :class:`repro.comm.Communicator`
+        transport when one was wired in (``TrainStepConfig.moe_transport``),
+        else the native ``lax.all_to_all``.  A tiled all-to-all is a pure
+        permutation, so its autodiff transpose — the inverse all-to-all —
+        is already correct under ``check_vma=False``; no custom VJP.
+        """
+        if self.model_axis is None:
+            return x
+        if self.a2a is not None:
+            return self.a2a(x, split_axis=split_axis, concat_axis=concat_axis)
+        return lax.all_to_all(x, self.model_axis, split_axis, concat_axis,
+                              tiled=True)
+
+    def gather_replicated(self, x):
+        """All-gather a model-axis batch shard back to a replicated tensor
+        (identity backward: the output is consumed as replicated, so each
+        rank's true cotangent is just its own slice — the gather dual of
+        :meth:`psum`)."""
+        return _gather_id_bwd(x, self.model_axis) if self.model_axis else x
 
     # -- data-axis helpers -----------------------------------------------------
 
@@ -90,6 +118,23 @@ def _psum_id_bwd_rule(axis, _, ct):
 
 
 _psum_id_bwd.defvjp(_psum_id_fwd, _psum_id_bwd_rule)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _gather_id_bwd(x, axis):
+    return lax.all_gather(x, axis, tiled=True)
+
+
+def _gather_id_fwd(x, axis):
+    return lax.all_gather(x, axis, tiled=True), x.shape[0]
+
+
+def _gather_id_bwd_rule(axis, n_local, ct):
+    i = lax.axis_index(axis)
+    return (lax.dynamic_slice_in_dim(ct, i * n_local, n_local, axis=0),)
+
+
+_gather_id_bwd.defvjp(_gather_id_fwd, _gather_id_bwd_rule)
 
 
 # ---------------------------------------------------------------------------

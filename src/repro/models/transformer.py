@@ -67,10 +67,12 @@ def param_count(params) -> int:
 
 
 def block_apply(p: dict, x: jax.Array, cfg: ModelConfig, i: int, *, ctx,
-                positions, causal_skip: bool) -> tuple[jax.Array, jax.Array]:
+                positions, causal_skip: bool
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
     kind = cfg.layer_kind(i)
     cdt = jnp.dtype(cfg.dtype)
     aux = jnp.zeros((), jnp.float32)
+    drop = jnp.zeros((), jnp.float32)
     h = ctx.fan_out(rmsnorm(p["ln1"], x, cfg.norm_eps))
     if kind["mixer"] == "attn":
         mix = attn_mod.attn_apply(p["attn"], h, cfg.attn,
@@ -92,30 +94,35 @@ def block_apply(p: dict, x: jax.Array, cfg: ModelConfig, i: int, *, ctx,
     x = x + mix.astype(x.dtype)
 
     if "moe" not in p and "mlp" not in p:     # pure-SSM stacks (d_ff == 0)
-        return x, aux
+        return x, aux, drop
     h = rmsnorm(p["ln2"], x, cfg.norm_eps)
     if kind["mlp"] != "moe":      # moe places its own f-boundaries
         h = ctx.fan_out(h)
     if kind["mlp"] == "moe":
-        y, aux = moe_mod.moe_apply(p["moe"], h, cfg.moe, cfg.act, ctx=ctx,
-                                   compute_dtype=cdt)
+        y, aux, drop = moe_mod.moe_apply(p["moe"], h, cfg.moe, cfg.act,
+                                         ctx=ctx, compute_dtype=cdt)
     else:
         y = glu_mlp(p["mlp"], h, cfg.act, cdt, ctx, cfg.d_ff)
-    return x + y.astype(x.dtype), aux
+    return x + y.astype(x.dtype), aux, drop
 
 
 def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *, ctx,
             extra_embeds: jax.Array | None = None,
             causal_skip: bool = False,
-            block_resolver=None) -> tuple[jax.Array, jax.Array]:
+            block_resolver=None) -> tuple[jax.Array, jax.Array, jax.Array]:
     """tokens: (B, S_text).  ``extra_embeds`` (B, P, d) are prepended
-    (modality stub).  Returns (logits (B, S_total, V_local), aux_loss)."""
+    (modality stub).  Returns (logits (B, S_total, V_local), aux_loss,
+    drop_fraction) — the latter averaged over the MoE layers (0 for dense
+    stacks)."""
     cdt = jnp.dtype(cfg.dtype)
     x = embed(params["embed"], tokens, cdt, ctx, cfg.vocab_size)
     if extra_embeds is not None:
         x = jnp.concatenate([extra_embeds.astype(cdt), x], axis=1)
     positions = jnp.arange(x.shape[1])
     aux_total = jnp.zeros((), jnp.float32)
+    drop_total = jnp.zeros((), jnp.float32)
+    n_moe = sum(1 for i in range(cfg.num_layers)
+                if cfg.layer_kind(i)["mlp"] == "moe")
 
     for i, raw in enumerate(params["blocks"]):
         # ``raw`` is either the block's param dict or (FSDP) its flat shard
@@ -127,8 +134,9 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *, ctx,
                                causal_skip=causal_skip)
         if cfg.remat == "layer":
             fn = jax.checkpoint(fn)
-        x, aux = fn(raw, x)
+        x, aux, drop = fn(raw, x)
         aux_total = aux_total + aux
+        drop_total = drop_total + drop
 
     x = ctx.fan_out(rmsnorm(params["final_norm"], x, cfg.norm_eps))
     if cfg.tie_embeddings:
@@ -137,21 +145,28 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *, ctx,
         from repro.models.common import dense
 
         logits = dense(params["lm_head"], x, cdt)
-    return logits, aux_total
+    return logits, aux_total, drop_total / max(n_moe, 1)
 
 
 def loss_fn(params: dict, batch: dict, cfg: ModelConfig, *, ctx,
-            causal_skip: bool = False, block_resolver=None) -> jax.Array:
+            causal_skip: bool = False, block_resolver=None,
+            stats_out: list | None = None) -> jax.Array:
     """batch: {"tokens": (B,S), "labels": (B,S), optional "mask",
-    optional "extra_embeds" (B,P,d)} — loss over text positions only."""
+    optional "extra_embeds" (B,P,d)} — loss over text positions only.
+
+    ``stats_out``, when given, receives one ``{"moe_drop_fraction": scalar}``
+    dict per call — the side channel the train step uses to surface routing
+    health without changing the loss signature ``value_and_grad`` sees."""
     extra = batch.get("extra_embeds")
-    logits, aux = forward(params, batch["tokens"], cfg, ctx=ctx,
-                          extra_embeds=extra, causal_skip=causal_skip,
-                          block_resolver=block_resolver)
+    logits, aux, drop = forward(params, batch["tokens"], cfg, ctx=ctx,
+                                extra_embeds=extra, causal_skip=causal_skip,
+                                block_resolver=block_resolver)
     if extra is not None:
         logits = logits[:, extra.shape[1]:]
     loss = softmax_xent(logits, batch["labels"], batch.get("mask"), ctx,
                         cfg.vocab_size)
+    if stats_out is not None:
+        stats_out.append({"moe_drop_fraction": drop})
     return loss + AUX_LOSS_WEIGHT * aux
 
 
@@ -229,8 +244,8 @@ def decode_step(params: dict, token: jax.Array, state: list, pos: jax.Array,
         if "moe" in bp or "mlp" in bp:
             h = rmsnorm(bp["ln2"], x, cfg.norm_eps)
             if kind["mlp"] == "moe":
-                y, _ = moe_mod.moe_apply(bp["moe"], h, cfg.moe, cfg.act,
-                                         ctx=ctx, compute_dtype=cdt)
+                y, _, _ = moe_mod.moe_apply(bp["moe"], h, cfg.moe, cfg.act,
+                                            ctx=ctx, compute_dtype=cdt)
             else:
                 y = glu_mlp(bp["mlp"], h, cfg.act, cdt, ctx, cfg.d_ff)
             x = x + y.astype(x.dtype)

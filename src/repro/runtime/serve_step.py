@@ -67,11 +67,11 @@ def build_prefill(model: Model, mesh: Mesh, shape_cfg, *,
                                                       jnp.bfloat16)
             from repro.models import transformer
 
-            logits, _ = transformer.forward(tree, batch["tokens"], model.cfg,
-                                            ctx=ctx,
-                                            extra_embeds=batch.get("extra_embeds"),
-                                            causal_skip=causal_skip,
-                                            block_resolver=resolver)
+            logits, _, _ = transformer.forward(tree, batch["tokens"], model.cfg,
+                                               ctx=ctx,
+                                               extra_embeds=batch.get("extra_embeds"),
+                                               causal_skip=causal_skip,
+                                               block_resolver=resolver)
             return logits
     else:
         pspecs = model.param_specs(mesh)

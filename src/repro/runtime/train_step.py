@@ -46,7 +46,13 @@ fused pack+quantize kernels (:mod:`repro.kernels.pack_quant`) and the
 train state grows an ``"ef"`` leaf — the per-element error-feedback
 residual, compensated into every encode so the quantization error
 telescopes instead of accumulating.  Without the arena it falls back to
-the legacy per-hop ring codec (the old ``ring_compressed`` transport).
+the legacy per-hop ring codec (the ring transports re-encode every hop).
+
+MoE expert parallelism rides its own communicator: ``moe_transport`` /
+``moe_channels`` configure the single-axis all-to-all the models reach via
+``ParallelCtx.all_to_all`` (dispatch/combine of the capacity buffer), and
+the routing layer's capacity-overflow drops surface as the
+``moe_drop_fraction`` metric next to loss/grad_norm.
 """
 
 from __future__ import annotations
@@ -99,6 +105,13 @@ class TrainStepConfig:
     fsdp_bucket_bytes: int = 512 * 2**20
     fsdp_gather: str = "native"        # "native" (one all-gather op) | "ring"
                                        # (our unrolled schedule; hillclimb knob)
+    moe_transport: str = "a2a"         # EP dispatch/combine transport over the
+                                       # model axis: "a2a" (native HLO
+                                       # all-to-all) | "ring" | "ring_hier"
+                                       # (ppermute hops) | "psum" (honest
+                                       # replicated fallback)
+    moe_channels: int = 0              # stripe the EP payload's feature dim
+                                       # into N independent rails (0/1 = one)
 
     def comm_config(self, data_axes: tuple[str, ...]) -> CommConfig:
         """The communicator config for this step: ``comm`` when given,
@@ -139,9 +152,27 @@ def _mesh_axes(mesh: Mesh) -> tuple[tuple[str, ...], str | None]:
     return data_axes, model_axis
 
 
-def make_ctx(mesh: Mesh) -> ParallelCtx:
+def make_ctx(mesh: Mesh, cfg: TrainStepConfig | None = None) -> ParallelCtx:
+    """The models' explicit-collective context.  With a ``cfg`` and a model
+    axis the ctx carries the configured EP all-to-all (``moe_transport`` /
+    ``moe_channels``) as its dispatch/combine primitive; without one the
+    ctx falls back to the native tiled ``lax.all_to_all``."""
     data_axes, model_axis = _mesh_axes(mesh)
-    return ParallelCtx(model_axis=model_axis, data_axes=data_axes)
+    moe_comm = build_moe_comm(mesh, cfg) if cfg is not None else None
+    a2a = moe_comm.all_to_all if moe_comm is not None else None
+    return ParallelCtx(model_axis=model_axis, data_axes=data_axes, a2a=a2a)
+
+
+def build_moe_comm(mesh: Mesh, cfg: TrainStepConfig) -> Communicator | None:
+    """The EP communicator :func:`make_ctx` attaches (None without a model
+    axis) — the dry-run prices its :meth:`~repro.comm.Communicator.a2a_plan`
+    against the lowered HLO."""
+    _, model_axis = _mesh_axes(mesh)
+    if model_axis is None:
+        return None
+    return Communicator(mesh, CommConfig(
+        transport=cfg.moe_transport, data_axes=(model_axis,),
+        channels=cfg.moe_channels))
 
 
 def _sizes(mesh: Mesh) -> dict[str, int]:
@@ -537,12 +568,13 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
     """Returns ``step(state, batch) -> (state, metrics)`` jitted over the
     fully-manual mesh."""
     pspecs = model.param_specs(mesh)
-    ctx = make_ctx(mesh)
+    ctx = make_ctx(mesh, cfg)
     schedule = make_schedule(cfg.optim.schedule, base_lr=cfg.optim.base_lr,
                              warmup=cfg.optim.warmup,
                              total=cfg.optim.total_steps)
     _, state_specs = init_train_state(model, mesh, cfg, abstract=True)
-    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P(),
+                    "moe_drop_fraction": P()}
 
     if cfg.dp_mode in ("replicated", "zero1"):
         comm = build_comm(mesh, cfg)
@@ -570,13 +602,20 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                     comm_arena.layout, zero1_norm_weights)
 
         def step_fn(state, batch):
+            drops: list = []             # per-microbatch moe_drop_fraction
+
             def gfn(p, mb):
+                stats: list = []
                 loss = model.loss_fn(p, mb, ctx=ctx,
-                                     causal_skip=cfg.causal_skip)
-                return loss, None
+                                     causal_skip=cfg.causal_skip,
+                                     stats_out=stats)
+                drop = (stats[0]["moe_drop_fraction"] if stats
+                        else jnp.zeros((), jnp.float32))
+                return loss, drop
 
             def grad_fn(p, mb):
-                (loss, _), g = jax.value_and_grad(gfn, has_aux=True)(p, mb)
+                (loss, drop), g = jax.value_and_grad(gfn, has_aux=True)(p, mb)
+                drops.append(drop)
                 return loss, g
 
             new_arena = None
@@ -654,8 +693,9 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                 new_state["arena"] = new_arena
             if new_ef is not None:
                 new_state["ef"] = new_ef
+            drop = sum(drops) / max(len(drops), 1)
             metrics = {"loss": ctx.pmean_data(loss), "grad_norm": gnorm,
-                       "lr": lr}
+                       "lr": lr, "moe_drop_fraction": ctx.pmean_data(drop)}
             return new_state, metrics
 
     else:  # fsdp / ZeRO-3
@@ -673,15 +713,24 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                           else CommArena(plan.arena_layout, impl=fsdp_impl))
 
         def step_fn(state, batch):
+            drops: list = []             # per-microbatch moe_drop_fraction
+
             def gfn(groups, mb):
                 params, resolver = plan.params_and_resolver(groups, gdt)
+                stats: list = []
                 loss = model.loss_fn(params, mb, ctx=ctx,
                                      causal_skip=cfg.causal_skip,
-                                     block_resolver=resolver)
-                return loss
+                                     block_resolver=resolver,
+                                     stats_out=stats)
+                drop = (stats[0]["moe_drop_fraction"] if stats
+                        else jnp.zeros((), jnp.float32))
+                return loss, drop
 
             def grad_fn(groups, mb):
-                return jax.value_and_grad(gfn)(groups, mb)
+                (loss, drop), g = jax.value_and_grad(gfn, has_aux=True)(
+                    groups, mb)
+                drops.append(drop)
+                return loss, g
 
             new_arena = None
             new_ef = None
@@ -734,8 +783,9 @@ def build_train_step(model: Model, mesh: Mesh, cfg: TrainStepConfig,
                 new_state["arena"] = new_arena
             if new_ef is not None:
                 new_state["ef"] = new_ef
+            drop = sum(drops) / max(len(drops), 1)
             metrics = {"loss": ctx.pmean_data(loss), "grad_norm": gnorm,
-                       "lr": lr}
+                       "lr": lr, "moe_drop_fraction": ctx.pmean_data(drop)}
             return new_state, metrics
 
     sharded = compat.shard_map(step_fn, mesh=mesh,

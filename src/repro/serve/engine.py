@@ -217,8 +217,9 @@ def build_paged_decode_step(model, mesh: Mesh, plan: KVArenaPlan, *,
             if "moe" in bp or "mlp" in bp:
                 h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
                 if kind["mlp"] == "moe":
-                    y, _ = moe_mod.moe_apply(bp["moe"], h2, cfg.moe, cfg.act,
-                                             ctx=ctx, compute_dtype=cdt)
+                    y, _, _ = moe_mod.moe_apply(bp["moe"], h2, cfg.moe,
+                                                cfg.act, ctx=ctx,
+                                                compute_dtype=cdt)
                 else:
                     y = glu_mlp(bp["mlp"], h2, cfg.act, cdt, ctx, cfg.d_ff)
                 x = x + y.astype(x.dtype)

@@ -96,8 +96,9 @@ def test_moe_matches_dense_reference(rng):
     p = moe_mod.moe_init(key, cfg, d)
     B, S = 2, 32
     x = jnp.asarray(rng.randn(B, S, d).astype(np.float32)) * 0.5
-    y, aux = moe_mod.moe_apply(p, x, cfg, "silu", ctx=SINGLE,
-                               compute_dtype=jnp.float32)
+    y, aux, drop = moe_mod.moe_apply(p, x, cfg, "silu", ctx=SINGLE,
+                                     compute_dtype=jnp.float32)
+    assert float(drop) == 0.0          # generous capacity: nothing dropped
 
     # dense reference
     logits = np.asarray(x) @ np.asarray(p["router"]["w"])
@@ -123,12 +124,15 @@ def test_moe_capacity_drops_tokens():
     cfg = MoEConfig(num_experts=2, top_k=1, expert_ff=16, capacity_factor=0.1)
     p = moe_mod.moe_init(jax.random.key(3), cfg, 8)
     x = jnp.ones((1, 64, 8), jnp.float32)  # all tokens -> same expert
-    y, _ = moe_mod.moe_apply(p, x, cfg, "silu", ctx=SINGLE,
-                             compute_dtype=jnp.float32)
+    y, _, drop = moe_mod.moe_apply(p, x, cfg, "silu", ctx=SINGLE,
+                                   compute_dtype=jnp.float32)
     assert np.isfinite(np.asarray(y)).all()
     # most tokens dropped -> most outputs zero
     nonzero = np.abs(np.asarray(y)).sum(-1) > 1e-6
-    assert nonzero.sum() <= moe_mod.capacity(64, cfg) * cfg.num_experts
+    cap = moe_mod.capacity(64, cfg)
+    assert nonzero.sum() <= cap * cfg.num_experts
+    # the drop metric reports exactly the overflow: 64 tokens -> one expert
+    assert float(drop) == pytest.approx((64 - cap) / 64)
 
 
 def test_gqa_head_gather_mapping():
@@ -140,3 +144,48 @@ def test_gqa_head_gather_mapping():
     expect = [0, 0, 0, 1, 1, 1, 1, 1]
     for h, e in enumerate(expect):
         np.testing.assert_array_equal(np.asarray(kk[:, h]), np.asarray(k[:, e]))
+
+
+def test_moe_aux_loss_uniform_router_is_one_for_every_k():
+    """A uniform router (zero logits) must sit at the balanced fixed point
+    1.0 regardless of top_k.  The pre-fix form collapsed top-k multiplicity
+    through ``> 0`` and skipped the 1/k, so it returned k instead — mixtral
+    (k=2) and llama4 (k=1) aux losses were not comparable."""
+    d = 16
+    for k in (1, 2, 4):
+        cfg = MoEConfig(num_experts=8, top_k=k, expert_ff=32,
+                        capacity_factor=8.0)
+        p = moe_mod.moe_init(jax.random.key(0), cfg, d)
+        p = dict(p, router={"w": jnp.zeros_like(p["router"]["w"])})
+        x = jnp.asarray(np.random.RandomState(0).randn(2, 16, d)
+                        .astype(np.float32))
+        _, aux, _ = moe_mod.moe_apply(p, x, cfg, "silu", ctx=SINGLE,
+                                      compute_dtype=jnp.float32)
+        assert float(aux) == pytest.approx(1.0, abs=1e-6), k
+
+
+def test_moe_aux_loss_balanced_assignment_is_one():
+    """Direct fixed-point check: uniform gates + perfectly balanced top-k
+    assignment -> exactly 1.0 for every k."""
+    e = 8
+    for k in (1, 2, 4):
+        b, s = 2, e
+        gates = jnp.full((b, s, e), 1.0 / e)
+        # token t takes experts (t*k, t*k+1, ..) mod e: each expert used
+        # exactly s*k/e times per row
+        ids = (jnp.arange(s)[:, None] * k + jnp.arange(k)[None, :]) % e
+        ids = jnp.broadcast_to(ids[None], (b, s, k))
+        aux = moe_mod.load_balance_aux(gates, ids, e, k)
+        assert float(aux) == pytest.approx(1.0, abs=1e-6), k
+
+
+def test_moe_drop_fraction_concentrated_routing():
+    """All tokens on one expert: drop_fraction == (T - cap) / T exactly."""
+    e, k, s = 4, 1, 64
+    ids = jnp.zeros((2, s, k), jnp.int32)
+    cap = 16
+    frac = moe_mod.dropped_fraction(ids, e, cap)
+    assert float(frac) == pytest.approx((s - cap) / s)
+    # balanced routing under the same capacity: nothing dropped
+    bal = jnp.broadcast_to((jnp.arange(s) % e)[None, :, None], (2, s, k))
+    assert float(moe_mod.dropped_fraction(bal, e, cap)) == 0.0

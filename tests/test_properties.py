@@ -21,7 +21,7 @@ except ImportError:               # deterministic grid fallback
     HAVE_HYPOTHESIS = False
 
 from repro.core.bucketing import GradientBucketer
-from repro.core.compression import Int8BlockCodec, IdentityCodec
+from repro.comm.wire_codec import Int8BlockCodec, IdentityCodec
 from repro.core.halo import halo_bytes, HaloSpec
 from repro.core.ring import RingConfig
 from repro.core.topology import padded_size, ring_perm
@@ -451,3 +451,41 @@ def test_quant_arena_oversized_leaves_keep_own_scales(n_leaves, base_blocks,
                            np.finfo(np.float32).tiny)
         bound = np.repeat(scale / 2.0 * (1 + 1e-5), block)[:x.size]
         assert np.all(np.abs(np.asarray(back[k]) - x) <= bound), k
+
+
+# ---------------------------------------------------------------------------
+# MoE capacity: a capacity_factor >= num_experts can never drop (even fully
+# concentrated routing fits), and dropped_fraction is exact under overflow
+# ---------------------------------------------------------------------------
+
+
+@given_or_grid(
+    "e,k,s,seed",
+    [(4, 2, 16, 0), (8, 1, 32, 1), (2, 2, 8, 2), (16, 4, 24, 3)],
+    lambda: dict(e=st.sampled_from([2, 4, 8, 16]),
+                 k=st.sampled_from([1, 2, 4]),
+                 s=st.integers(4, 48),
+                 seed=st.integers(0, 2**16)))
+def test_moe_sufficient_capacity_never_drops(e, k, s, seed):
+    from repro.configs.base import MoEConfig
+    from repro.models import moe as moe_mod
+
+    k = min(k, e)
+    rng = np.random.RandomState(seed)
+    ids = jnp.asarray(rng.randint(0, e, size=(2, s, k)).astype(np.int32))
+    # capacity_factor == num_experts -> cap >= s*k even if every token
+    # routes to one expert
+    cfg = MoEConfig(num_experts=e, top_k=k, expert_ff=8,
+                    capacity_factor=float(e))
+    cap = moe_mod.capacity(s, cfg)
+    assert cap >= s * k
+    assert float(moe_mod.dropped_fraction(ids, e, cap)) == 0.0
+    # exactness under overflow: brute-force count vs the one-hot sum
+    small_cap = max(1, (s * k) // (2 * e))
+    want = 0
+    for b in range(2):
+        flat = np.asarray(ids[b]).reshape(-1)
+        for ex in range(e):
+            want += max(int((flat == ex).sum()) - small_cap, 0)
+    got = float(moe_mod.dropped_fraction(ids, e, small_cap)) * (2 * s * k)
+    assert got == pytest.approx(want)
