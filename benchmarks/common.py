@@ -77,3 +77,27 @@ def time_call(fn, *args, warmup=1, iters=3):
 # one source of truth for module importers and TIMER_SNIPPET consumers
 TIMER_SNIPPET = "\n" + inspect.getsource(Timing) + "\n" + \
     inspect.getsource(time_call) + "\n"
+
+
+def _obs_schema():
+    # the harness may run without PYTHONPATH=src (python benchmarks/run.py)
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+    from repro.obs import schema
+
+    return schema
+
+
+def bench_rows(stdout: str) -> list[dict]:
+    """Parse a bench's CSV stdout into schema row dicts (repro.obs.schema)."""
+    return _obs_schema().rows_from_csv(stdout)
+
+
+def write_bench_json(out_dir: str, name: str, stdout: str,
+                     meta: dict | None = None) -> str:
+    """Write one ``BENCH_<name>.json`` under ``out_dir`` from a bench's CSV
+    stdout, through the shared ``repro.obs.bench/v1`` schema; returns the
+    path."""
+    schema = _obs_schema()
+    return schema.write_bench_record(out_dir, name, bench_rows(stdout),
+                                     meta=meta)

@@ -2,19 +2,25 @@
 
 Prints ``name,us_per_call,derived`` CSV blocks (measured on 8 XLA host
 devices in subprocesses; see benchmarks/common.py for why measured numbers
-live here and wire-level numbers live in the dry-run roofline).
+live here and wire-level numbers live in the dry-run roofline).  With
+``--json DIR`` every section's rows are additionally written as
+``DIR/BENCH_<name>.json`` through the shared ``repro.obs.bench/v1`` schema,
+so the perf trajectory is machine-diffable run-over-run.
 
-    PYTHONPATH=src python -m benchmarks.run [--only allreduce,halo,...]
+    PYTHONPATH=src python -m benchmarks.run [--only allreduce,halo,...] \
+        [--json out/] [--dry]
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
 from benchmarks import bench_allreduce, bench_arena, bench_cg, bench_halo, \
     bench_moe, bench_overhead, bench_overlap, bench_serve, bench_stencil
+from benchmarks.common import write_bench_json
 
 SECTIONS = [
     ("fig1_2_5_allreduce", bench_allreduce.run,
@@ -46,6 +52,12 @@ SECTIONS = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="also write each section's rows as "
+                         "DIR/BENCH_<name>.json (repro.obs.bench/v1)")
+    ap.add_argument("--dry", action="store_true",
+                    help="reduced shapes/iters where a bench supports it "
+                         "(CI smoke)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -55,10 +67,19 @@ def main() -> None:
             continue
         print(f"\n## {name} — {desc}", flush=True)
         t0 = time.time()
+        kw = ({"dry": True} if args.dry
+              and "dry" in inspect.signature(fn).parameters else {})
         try:
-            out = fn()
+            out = fn(**kw)
             sys.stdout.write(out)
-            print(f"## {name} done in {time.time()-t0:.0f}s", flush=True)
+            dt = time.time() - t0
+            print(f"## {name} done in {dt:.0f}s", flush=True)
+            if args.json:
+                path = write_bench_json(
+                    args.json, name, out,
+                    meta={"desc": desc, "seconds": round(dt, 3),
+                          "dry": bool(kw)})
+                print(f"## {name} rows -> {path}", flush=True)
         except Exception as e:  # keep the harness running
             failures += 1
             print(f"## {name} FAILED: {e}", flush=True)

@@ -44,6 +44,8 @@ def run_paged(args) -> None:
     from repro.serve.kv import plan_kv_arena
     from repro.serve.scheduler import ServeScheduler, mixed_trace
 
+    from repro.obs import ObsConfig, make_obs
+
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
     r = args.model_parallel
@@ -55,7 +57,10 @@ def run_paged(args) -> None:
     longest = args.prompt_len + max(args.long_len, args.short_len)
     plan = plan_kv_arena(cfg, mesh, page_tokens=args.page_tokens,
                          max_seqs=args.slots, max_seq_len=longest)
-    engine = PagedDecodeEngine(model, mesh, plan, attn_impl=args.attn_impl)
+    obs = make_obs(ObsConfig(run_dir=args.obs_dir)
+                   if args.obs_dir else None)
+    engine = PagedDecodeEngine(model, mesh, plan, attn_impl=args.attn_impl,
+                               obs=obs)
     params = model.init(jax.random.key(0))
     trace = mixed_trace(groups=args.groups, slots=args.slots,
                         long_len=args.long_len, short_len=args.short_len,
@@ -85,6 +90,9 @@ def run_paged(args) -> None:
         ratio = (results["continuous"]["tokens_per_step"]
                  / results["static"]["tokens_per_step"])
         print(f"  continuous / static throughput: {ratio:.2f}x")
+    paths = obs.finish()
+    if paths and paths.get("events"):
+        print(f"  obs: events={paths['events']} trace={paths['trace']}")
 
 
 def run_contiguous(args) -> None:
@@ -151,6 +159,9 @@ def main() -> None:
     ap.add_argument("--long-len", type=int, default=64)
     ap.add_argument("--short-len", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=1)
+    ap.add_argument("--obs-dir", default=None, metavar="DIR",
+                    help="paged: instrument the run (JSONL events + Chrome "
+                         "trace under DIR)")
     args = ap.parse_args()
 
     if args.paged:

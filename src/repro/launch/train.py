@@ -20,6 +20,7 @@ from repro.configs.base import ShapeConfig
 from repro.data import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.settings import settings_for
+from repro.obs import ObsConfig
 from repro.tune import resolve
 from repro.models import build_model
 from repro.optim import OptimConfig
@@ -61,6 +62,14 @@ def main() -> None:
                     help="tuning DB (repro.tune.probe output): resolve the "
                          "arch's 'auto' comm knobs — and any channels=0 — "
                          "to the DB's measured-best config before launch")
+    ap.add_argument("--obs-dir", default=None, metavar="DIR",
+                    help="instrument the run: JSONL event stream + Chrome "
+                         "trace under DIR (read with "
+                         "python -m repro.obs.report DIR)")
+    ap.add_argument("--obs-predict", action="store_true",
+                    help="AOT-price the step (roofline; with --tuned, the "
+                         "DB's measured alpha/beta) and track live "
+                         "predicted-vs-measured drift")
     args = ap.parse_args()
 
     st = settings_for(args.arch)
@@ -104,10 +113,19 @@ def main() -> None:
         schedule=args.accum_policy or "accumulate_then_reduce",
         use_arena=args.use_arena, wire_codec=args.wire_codec,
         moe_transport=st.moe_transport, moe_channels=st.moe_channels)
+    obs_cfg = None
+    if args.obs_dir or args.obs_predict:
+        obs_cfg = ObsConfig(run_dir=args.obs_dir,
+                            predict=args.obs_predict,
+                            tuned_db=args.tuned if args.obs_predict else None)
     trainer = Trainer(model, mesh, step_cfg, data, shape,
                       TrainerConfig(steps=args.steps, ckpt_every=50,
-                                    ckpt_dir=args.ckpt_dir, log_every=10))
-    trainer.run()
+                                    ckpt_dir=args.ckpt_dir, log_every=10,
+                                    obs=obs_cfg))
+    out = trainer.run()
+    if obs_cfg is not None and out.get("obs", {}).get("events"):
+        print(f"obs: events={out['obs']['events']} "
+              f"trace={out['obs']['trace']}")
 
 
 if __name__ == "__main__":

@@ -37,6 +37,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.comm import CommConfig, Communicator
+from repro.obs import NULL_OBS
 from repro.configs.base import ModelConfig
 from repro.kernels.flash_decode import ops as fd_ops
 from repro.kernels.flash_decode import ref as fd_ref
@@ -264,8 +265,9 @@ class PagedDecodeEngine:
 
     def __init__(self, model, mesh: Mesh, plan: KVArenaPlan, *,
                  attn_impl: str = "kernel", interpret: bool | None = None,
-                 donate: bool = True):
+                 donate: bool = True, obs=None):
         self.model, self.mesh, self.plan = model, mesh, plan
+        self.obs = obs if obs is not None else NULL_OBS
         self.step, self.param_specs, self.state_specs = \
             build_paged_decode_step(model, mesh, plan, attn_impl=attn_impl,
                                     interpret=interpret, donate=donate)
@@ -296,11 +298,35 @@ class PagedDecodeEngine:
         self.slot_len[slot] = 0
         self.slot_valid[slot] = True
         self._ensure_block(slot)
+        self.obs.counter("admits")
+        self.obs.event("admit", slot=slot,
+                       pages_free=self.allocator.n_free)
+        self._kv_gauges()
 
     def retire(self, slot: int) -> None:
+        tokens = int(self.slot_len[slot])
         self.allocator.free(self.table.clear_slot(slot))
         self.slot_valid[slot] = False
         self.slot_len[slot] = 0
+        self.obs.counter("retires")
+        self.obs.event("retire", slot=slot, tokens=tokens,
+                       pages_free=self.allocator.n_free)
+        self._kv_gauges()
+
+    def _kv_gauges(self) -> None:
+        """Arena health after a slot transition: page occupancy (fraction of
+        arena pages mapped) and page waste (fraction of mapped capacity not
+        yet holding a token — the partial last page of every live slot)."""
+        alloc, plan = self.allocator, self.plan
+        used = alloc.n_total - alloc.n_free
+        self.obs.gauge("kv_pages_used", used)
+        self.obs.gauge("kv_pages_free", alloc.n_free)
+        self.obs.gauge("kv_page_occupancy", used / max(alloc.n_total, 1))
+        cap_tokens = (used // plan.n_layers) * plan.page_tokens
+        held = int(self.slot_len[self.slot_valid].sum())
+        waste = 1.0 - held / cap_tokens if cap_tokens else 0.0
+        self.obs.gauge("kv_page_waste", waste)
+        self.obs.gauge("live_slots", int(self.slot_valid.sum()))
 
     def _ensure_block(self, slot: int) -> None:
         blk = int(self.slot_len[slot]) // self.plan.page_tokens

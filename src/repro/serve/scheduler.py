@@ -24,10 +24,13 @@ at or past the prompt produces one token.
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass
 
 import numpy as np
+
+from repro.obs import NULL_OBS
 
 
 @dataclass(frozen=True)
@@ -71,12 +74,15 @@ class ServeScheduler:
     """Drives a :class:`~repro.serve.engine.PagedDecodeEngine` over a
     request trace under one of the two batching policies."""
 
-    def __init__(self, engine, policy: str = "continuous"):
+    def __init__(self, engine, policy: str = "continuous", obs=None):
         if policy not in ("continuous", "static"):
             raise ValueError(f"policy must be continuous|static, "
                              f"got {policy!r}")
         self.engine = engine
         self.policy = policy
+        # default to the engine's obs so one handle instruments the pair
+        self.obs = obs if obs is not None \
+            else getattr(engine, "obs", NULL_OBS)
 
     def _admit(self, queue: deque, slot_req: list, fed: np.ndarray) -> None:
         eng = self.engine
@@ -94,6 +100,7 @@ class ServeScheduler:
         """Process every request; returns throughput stats (tokens are
         *generated* tokens — prompt streaming is overhead, not output)."""
         eng = self.engine
+        obs = self.obs
         vocab = eng.model.cfg.vocab_size
         s = eng.plan.max_seqs
         queue = deque(requests)
@@ -102,17 +109,28 @@ class ServeScheduler:
         generated = np.zeros((s,), np.int64)
         steps = total_generated = total_prefill = 0
         live_sum = 0
+        t_run = time.time()
 
         while queue or eng.slot_valid.any():
             self._admit(queue, slot_req, fed)
+            obs.gauge("queue_depth", len(queue), policy=self.policy)
             live = np.nonzero(eng.slot_valid)[0]
             if live.size == 0:
+                obs.counter("serve_stall", reason="arena_too_small")
+                obs.event("serve_stall", reason="arena_too_small",
+                          queued=len(queue),
+                          need_tokens=queue[0].total_tokens,
+                          pages_free=eng.allocator.n_free,
+                          pages_total=eng.allocator.n_total)
                 raise RuntimeError(
                     f"scheduler stalled with {len(queue)} queued requests: "
                     f"request needs {queue[0].total_tokens} tokens but the "
                     f"arena cannot ever fit it (free pages "
                     f"{eng.allocator.n_free}/{eng.allocator.n_total})")
             if steps >= max_steps:
+                obs.counter("serve_stall", reason="max_steps")
+                obs.event("serve_stall", reason="max_steps",
+                          max_steps=max_steps, queued=len(queue))
                 raise RuntimeError(f"exceeded max_steps={max_steps}")
             # deterministic synthetic token stream (rid-keyed): the engine's
             # numerics are pinned elsewhere; the scheduler measures steps
@@ -120,7 +138,8 @@ class ServeScheduler:
             for sl in live:
                 r = slot_req[sl]
                 token[sl] = (r.rid * 7 + int(fed[sl])) % vocab
-            eng.decode(params, token)
+            with obs.span("decode_step", policy=self.policy):
+                eng.decode(params, token)
             steps += 1
             live_sum += int(live.size)
             for sl in live:
@@ -136,6 +155,16 @@ class ServeScheduler:
                     slot_req[sl] = None
                     generated[sl] = 0
 
+        wall = time.time() - t_run
+        obs.gauge("tokens_per_step", total_generated / max(steps, 1),
+                  policy=self.policy)
+        obs.gauge("tokens_per_sec", total_generated / max(wall, 1e-9),
+                  policy=self.policy)
+        obs.gauge("mean_live_slots", live_sum / max(steps, 1),
+                  policy=self.policy)
+        obs.event("serve_done", policy=self.policy, steps=steps,
+                  generated_tokens=total_generated, wall_s=wall,
+                  n_requests=len(requests))
         return {
             "policy": self.policy,
             "n_requests": len(requests),

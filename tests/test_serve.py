@@ -526,10 +526,24 @@ def test_scheduler_rejects_bad_policy_and_stalls():
         ServeScheduler(_FakeEngine(), policy="dynamic")
     with pytest.raises(ValueError):
         Request(0, prompt_len=0, decode_len=4)
-    # a request that can never fit must raise, not spin
-    sched = ServeScheduler(_FakeEngine(max_seqs=2, max_seq_len=16))
+    # a request that can never fit must raise, not spin — and the guard
+    # trip must be visible on the bus as a serve_stall counter
+    from repro.obs import ObsConfig, make_obs
+
+    obs = make_obs(ObsConfig(run_dir=None))
+    sched = ServeScheduler(_FakeEngine(max_seqs=2, max_seq_len=16), obs=obs)
     with pytest.raises(RuntimeError, match="stalled"):
         sched.run(None, [Request(0, 1, 1000)])
+    assert obs.bus.counter_total("serve_stall") == 1
+    assert obs.bus.counter_value("serve_stall",
+                                 reason="arena_too_small") == 1
+
+    # the max_steps guard trips the same counter under its own label
+    obs2 = make_obs(ObsConfig(run_dir=None))
+    sched2 = ServeScheduler(_FakeEngine(), obs=obs2)
+    with pytest.raises(RuntimeError, match="max_steps"):
+        sched2.run(None, [Request(0, 1, 64)], max_steps=3)
+    assert obs2.bus.counter_value("serve_stall", reason="max_steps") == 1
 
 
 def test_scheduler_policies_agree_on_the_real_engine(rng):

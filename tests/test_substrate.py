@@ -162,8 +162,9 @@ def test_straggler_monitor_flags_outliers():
     mon = StragglerMonitor(threshold=2.0, warmup_steps=2)
     flagged = [mon.record(i, 0.1) for i in range(8)]
     assert not any(flagged)
-    assert mon.record(8, 0.5) is True          # 5x the EWMA
-    assert mon.record(9, 0.1) is False         # estimate unpoisoned
+    ev = mon.record(8, 0.5)                    # 5x the EWMA
+    assert ev and ev.ratio == pytest.approx(5.0)
+    assert not mon.record(9, 0.1)              # estimate unpoisoned
     assert len(mon.events) == 1
 
 

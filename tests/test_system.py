@@ -82,6 +82,61 @@ def test_straggler_events_surface(tmp_path):
     model, shape, data, scfg, tcfg = _setup(tmp_path, steps=6)
     tr = Trainer(model, _mesh(), scfg, data, shape, tcfg, log=lambda s: None)
     for i in range(5):
-        tr.monitor.record(i, 0.1)
-    assert tr.monitor.record(5, 1.0) is True
+        assert not tr.monitor.record(i, 0.1)
+    ev = tr.monitor.record(5, 1.0)
+    # bool-compat: the event is truthy exactly when flagged
+    assert ev and ev.flagged and bool(ev) is True
+    assert ev.step == 5 and ev.seconds == 1.0
+    assert ev.ewma == pytest.approx(0.1) and ev.ratio == pytest.approx(10.0)
     assert len(tr.monitor.events) == 1
+    assert tr.monitor.events[0] is ev
+
+
+def test_straggler_event_structure_and_warmup():
+    from repro.runtime.ft import StragglerEvent, StragglerMonitor
+
+    m = StragglerMonitor(warmup_steps=2)
+    w = m.record(0, 5.0)   # compile step: collected, never flagged
+    assert isinstance(w, StragglerEvent)
+    assert not w and w.ewma == 0.0 and w.ratio == float("inf")
+    m.record(1, 0.1)       # ewma seeds from median(5.0, 0.1)
+    assert not m.record(2, 0.2)
+    assert m.events == []
+
+
+def test_heartbeat_dead_hosts_boundary_and_self_exclusion(tmp_path):
+    from repro.runtime.ft import Heartbeat
+
+    d = str(tmp_path / "beats")
+    a = Heartbeat(d, "a", timeout=10.0)
+    b = Heartbeat(d, "b", timeout=10.0)
+    a.beat(now=100.0)
+    b.beat(now=100.0)
+    # exactly at the timeout is still alive (strict >)
+    assert a.dead_hosts(now=110.0) == []
+    # one tick past: dead — but only as seen by the *other* host; a host
+    # never reports itself dead off its own stale file
+    assert a.dead_hosts(now=110.1) == ["b"]
+    assert b.dead_hosts(now=110.1) == ["a"]
+    b.beat(now=111.0)
+    assert a.dead_hosts(now=112.0) == []
+
+
+def test_heartbeat_prune_stale_cleans_beat_files(tmp_path):
+    from repro.runtime.ft import Heartbeat
+
+    d = str(tmp_path / "beats")
+    a = Heartbeat(d, "a", timeout=1.0)
+    b = Heartbeat(d, "b", timeout=1.0)
+    a.beat(now=0.0)
+    b.beat(now=0.0)
+    # within grace: dead but not pruned
+    assert a.prune_stale(now=5.0) == []
+    assert a.dead_hosts(now=5.0) == ["b"]
+    # past grace (default 10x timeout): the stale file is removed...
+    assert a.prune_stale(now=11.0) == ["b"]
+    assert a.dead_hosts(now=11.0) == []
+    # ...but never the reporter's own file
+    assert a.prune_stale(now=1e9) == []
+    assert (tmp_path / "beats" / "a.beat").exists()
+    assert not (tmp_path / "beats" / "b.beat").exists()

@@ -272,13 +272,15 @@ def test_straggler_monitor_seeds_from_warmup_median():
 
     mon = StragglerMonitor(threshold=2.0, warmup_steps=3)
     # compile step is 500x a steady step; old code seeded the EWMA with it
-    assert mon.record(0, 50.0) is False
-    assert mon.record(1, 0.1) is False
-    assert mon.record(2, 0.1) is False
+    assert not mon.record(0, 50.0)
+    assert not mon.record(1, 0.1)
+    assert not mon.record(2, 0.1)
     assert mon._ewma == pytest.approx(0.1)   # median of [50, 0.1, 0.1]
     # an early 5x straggler is now caught (old code: 0.5 < 2*50 passed)
-    assert mon.record(3, 0.5) is True
-    assert mon.events == [(3, 0.5, pytest.approx(0.1))]
+    ev = mon.record(3, 0.5)
+    assert ev.flagged and bool(ev)
+    assert mon.events == [ev]
+    assert (ev.step, ev.seconds, ev.ewma) == (3, 0.5, pytest.approx(0.1))
 
 
 def test_straggler_monitor_warmup_emits_no_events():
@@ -286,7 +288,7 @@ def test_straggler_monitor_warmup_emits_no_events():
 
     mon = StragglerMonitor(threshold=2.0, warmup_steps=4)
     for step, sec in enumerate([10.0, 0.1, 30.0, 0.1]):
-        assert mon.record(step, sec) is False
+        assert not mon.record(step, sec)
     assert mon.events == []
     assert mon._ewma == pytest.approx((0.1 + 10.0) / 2)  # even-count median
 
@@ -295,8 +297,8 @@ def test_straggler_monitor_zero_warmup_still_works():
     from repro.runtime.ft import StragglerMonitor
 
     mon = StragglerMonitor(threshold=2.0, warmup_steps=0)
-    assert mon.record(0, 0.1) is False     # seeds from first sample
-    assert mon.record(1, 0.5) is True
+    assert not mon.record(0, 0.1)          # seeds from first sample
+    assert mon.record(1, 0.5).flagged
 
 
 def test_time_call_true_median_and_dispersion(monkeypatch):
